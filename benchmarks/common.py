@@ -1,0 +1,36 @@
+"""Shared benchmark utilities (timing on the real CPU device)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+# Linear-layer (N, K) shapes extracted from the paper's three LLM workloads
+# (§IV-B): DeepSeek-R1-, Qwen3.5- and HunyuanVideo-style projections.
+LLM_SHAPES = {
+    "deepseek_r1": [(7168, 18432), (18432, 7168), (7168, 2048), (2048, 7168),
+                    (7168, 4096), (4096, 7168), (1536, 7168), (7168, 1536),
+                    (7168, 9216), (9216, 7168), (7168, 7168)],
+    "qwen3_5": [(5120, 25600), (25600, 5120), (5120, 5120), (5120, 640),
+                (640, 5120), (5120, 13824), (13824, 5120)],
+    "hunyuan_video": [(3072, 12288), (12288, 3072), (3072, 3072),
+                      (3072, 9216), (9216, 3072), (3072, 6144)],
+}
+
+
+def time_fn(fn, *args, warmup: int = 2, reps: int = 5) -> float:
+    """Best-of wall-time of a jitted function (seconds)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts))
+
+
+def effective_gflops(M: int, N: int, K: int, seconds: float) -> float:
+    """Paper metric: 2MNK/time regardless of algorithm => LCMA can beat peak."""
+    return 2.0 * M * N * K / seconds / 1e9

@@ -1,0 +1,51 @@
+"""§IV-F: numerical precision — fused (f32 H on-chip) vs downcast-H baseline."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import algorithms as alg, codegen
+
+
+def run(sizes=(64, 128, 256), trials=4, verbose=True):
+    rows = []
+    for name in ("strassen", "s444"):
+        l = alg.get(name)
+        fused = codegen.generate(l, codegen.CodegenOptions(fused=True))
+        down = codegen.generate(l, codegen.CodegenOptions(
+            fused=False, downcast_h=True, gemm_backend="loop"))
+        for n in sizes:
+            m = -(-n // l.m) * l.m
+            ef, eds = [], []
+            for t in range(trials):
+                r = np.random.default_rng(t)
+                A64 = r.standard_normal((m, m)) * 3
+                B64 = r.standard_normal((m, m)) * 3
+                ref = A64 @ B64
+                A = jnp.asarray(A64, jnp.bfloat16)
+                B = jnp.asarray(B64, jnp.bfloat16)
+                nrm = np.linalg.norm(ref)
+                ef.append(np.linalg.norm(np.asarray(fused.fn(A, B), np.float64) - ref) / nrm)
+                eds.append(np.linalg.norm(np.asarray(down.fn(A, B), np.float64) - ref) / nrm)
+            improve = 1 - np.mean(ef) / np.mean(eds)
+            rows.append({"algo": name, "n": m, "fused_rel_err": float(np.mean(ef)),
+                         "downcast_rel_err": float(np.mean(eds)),
+                         "improvement": float(improve)})
+            if verbose:
+                print(f"{name} n={m}: fused={np.mean(ef):.4f} "
+                      f"downcast={np.mean(eds):.4f} (-{improve:.1%} error)")
+    return rows
+
+
+def main():
+    rows = run()
+    mean_imp = np.mean([r["improvement"] for r in rows])
+    print(f"\nmean error reduction of fused vs downcast-H: {mean_imp:.1%} "
+          f"(paper reports ~17.2% vs AlphaTensor)")
+    for r in rows:
+        print(f"precision,{r['algo']},{r['n']},{r['fused_rel_err']:.5f},"
+              f"{r['downcast_rel_err']:.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,...`` CSV lines per benchmark plus a summary. Run:
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from . import e2e_llm, operator_level, precision, roofline_fig8, stepwise
+
+    t0 = time.time()
+    print("=" * 72)
+    print("Fig.5 operator-level effective GFLOPS (CPU measured + v5e modeled)")
+    print("=" * 72)
+    operator_level.run(ms=(512, 1024) if args.quick else (512, 1024, 2048),
+                       max_shapes=2 if args.quick else 3)
+
+    print("\n" + "=" * 72)
+    print("Fig.6 end-to-end LLM prefill with FalconGEMM backend")
+    print("=" * 72)
+    e2e_llm.run(seqs=(128, 256) if args.quick else (128, 256, 512))
+
+    print("\n" + "=" * 72)
+    print("Fig.7 step-wise Execution Module evaluation")
+    print("=" * 72)
+    stepwise.run(sizes=(512, 1024) if args.quick else (512, 1024, 2048))
+
+    print("\n" + "=" * 72)
+    print("Fig.8 roofline + Decision Module selection (v5e model)")
+    print("=" * 72)
+    roofline_fig8.run()
+
+    print("\n" + "=" * 72)
+    print("IV-F numerical precision: fused vs downcast-H")
+    print("=" * 72)
+    precision.run(sizes=(64, 128) if args.quick else (64, 128, 256))
+
+    _dryrun_summary()
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s")
+
+
+def _dryrun_summary(out_dir: str = "artifacts/dryrun", perf_dir: str = "artifacts/perf"):
+    """Multi-pod dry-run + roofline headline (full tables: benchmarks.report)."""
+    import glob
+    import json
+    import os
+    if not os.path.isdir(out_dir):
+        return
+    print("\n" + "=" * 72)
+    print("Multi-pod dry-run + roofline summary (from artifacts/)")
+    print("=" * 72)
+    recs = [json.load(open(f)) for f in glob.glob(os.path.join(out_dir, "*.json"))]
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skip = [r for r in recs if r.get("status") == "skipped"]
+    err = [r for r in recs if r.get("status") == "error"]
+    print(f"cells: {len(ok)} compiled OK, {len(skip)} skipped (justified), "
+          f"{len(err)} errors")
+    with_frac = [(r["arch"], r["shape"], r["mesh"],
+                  r["analytic"]["roofline_fraction"], r["analytic"]["bottleneck"])
+                 for r in ok if "analytic" in r]
+    for a, s, m, f, b in sorted(with_frac, key=lambda x: -x[3])[:5]:
+        print(f"  best: {a} x {s} x {m}: frac={f:.3f} ({b}-bound)")
+    if os.path.isdir(perf_dir):
+        print("perf-loop records (EXPERIMENTS.md §Perf):")
+        for f in sorted(glob.glob(os.path.join(perf_dir, "*.json"))):
+            r = json.load(open(f))
+            if r.get("status") == "ok":
+                a = r["analytic"]
+                print(f"  {r.get('tag', '?'):26s} {r['arch']} x {r['shape']}: "
+                      f"frac={a['roofline_fraction']:.4f} ({a['bottleneck']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Inspect the production multi-pod distribution config for any arch x cell.
+
+Prints the mesh, the parameter sharding decisions (first N rules applied),
+the input specs, and the analytic roofline terms — without compiling.
+
+Run:  PYTHONPATH=src python examples/multipod_config.py --arch kimi_k2_1t --shape train_4k
+(abstract only — safe on CPU; the full compile lives in repro.launch.dryrun)
+"""
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3_27b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    # 512 virtual devices BEFORE jax init (same contract as the dry-run)
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax
+    from repro.configs import SHAPE_CELLS, get_config
+    from repro.core.hardware import TPU_V5E
+    from repro.launch import specs as SP
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.analytic import analytic_costs
+
+    cfg = get_config(args.arch)
+    cell = SHAPE_CELLS[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(f"mesh: {dict(mesh.shape)} = {len(mesh.devices.reshape(-1))} chips")
+    ok, why = SP.cell_applicable(cfg, cell)
+    if not ok:
+        print(f"cell skipped: {why}")
+        return
+    cs = SP.input_specs(cfg, cell, mesh)
+    print(f"params: {cs.n_params/1e9:.2f}B total, {cs.n_active_params/1e9:.2f}B active")
+    flat, _ = jax.tree_util.tree_flatten_with_path(cs.params)
+    print("parameter shardings (sample):")
+    for path, leaf in flat[:8]:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        print(f"  {name:42s} {str(leaf.shape):28s} {leaf.sharding.spec}")
+    ac = analytic_costs(cfg, cell, dict(mesh.shape), cs.n_params, cs.n_active_params)
+    tc, tm, tl = ac.terms(TPU_V5E, cfg.dtype)
+    print(f"\nanalytic roofline/device: compute={tc:.4f}s memory={tm:.4f}s "
+          f"collective={tl:.4f}s -> bottleneck: "
+          f"{max(zip((tc, tm, tl), ('compute', 'memory', 'collective')))[1]}")
+
+
+if __name__ == "__main__":
+    main()

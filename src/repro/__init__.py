@@ -1,0 +1,1 @@
+"""FalconGEMM on TPU — LCMA GEMM backend + multi-pod training/serving framework."""

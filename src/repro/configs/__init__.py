@@ -1,0 +1,5 @@
+from .base import ModelConfig, ShapeCell, SHAPE_CELLS
+from .registry import get_config, list_archs, smoke_config
+
+__all__ = ["ModelConfig", "ShapeCell", "SHAPE_CELLS", "get_config", "list_archs",
+           "smoke_config"]

@@ -1,0 +1,5 @@
+from . import algorithms, codegen, decision, discovery, hardware, lcma
+from .falcon_gemm import FalconConfig, falcon_dense, falcon_matmul
+
+__all__ = ["algorithms", "codegen", "decision", "discovery", "hardware", "lcma",
+           "FalconConfig", "falcon_dense", "falcon_matmul"]

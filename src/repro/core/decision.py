@@ -1,0 +1,200 @@
+"""Decision Module: analytical LCMA selection (paper §III-C, Table II).
+
+Given ``(M, N, K)``, a dtype and a ``HardwareProfile``, iterate the candidate
+set ``S_LCMA`` and pick the scheme with the best predicted runtime, or fall
+back to standard GEMM. The model is the paper's per-stage arithmetic-intensity
+analysis:
+
+  standard GEMM:   AI = 2MNK / (MK + NK + MN)           (Eq. 8 guard)
+  Combine A:       flops = (|U|0 - R) * (M/m)(K/k),  bytes = MK (1 + R/(mk))
+  Combine B:       flops = (|V|0 - R) * (K/k)(N/n),  bytes = NK (1 + R/(nk))
+  GEMM stage:      flops = 2RMNK/(mkn),               bytes = R(MK/mk + NK/nk + MN/mn)
+  Combine H:       flops = (|W|0 - mn) * (M/m)(N/n),  bytes = MN (1 + R/(mn))
+
+With the fused GEMM+Combine-H of Algorithm 2, H never reaches HBM: the fused
+stage writes C once (MN) and the R/mn overhead term vanishes (Eq. 9 -> 10).
+
+Each stage's time is ``max(compute_time, memory_time)`` — the roofline model
+of compute/memory pipeline overlap *within* a stage; stages are serialized
+(the paper notes Combine A cannot fully overlap the GEMM, §IV-E).
+
+Padding honesty: LCMA requires dimensions divisible by the grid; the model
+charges the *padded* problem for LCMA while standard GEMM runs unpadded, so
+boundary waste is priced into the decision.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from . import algorithms
+from .hardware import HardwareProfile
+from .lcma import LCMA
+
+__all__ = ["StageCost", "LCMAEstimate", "Decision", "gemm_time", "lcma_time",
+           "estimate", "decide", "eq8_is_memory_bound", "eq10_profitable",
+           "effective_tflops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCost:
+    name: str
+    flops: float
+    bytes: float
+    compute_time: float
+    memory_time: float
+
+    @property
+    def time(self) -> float:
+        return max(self.compute_time, self.memory_time)
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_time >= self.memory_time else "memory"
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / max(self.bytes, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class LCMAEstimate:
+    lcma: LCMA
+    stages: tuple[StageCost, ...]
+    padded_shape: tuple[int, int, int]
+
+    @property
+    def time(self) -> float:
+        return sum(s.time for s in self.stages)
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    M: int
+    N: int
+    K: int
+    dtype: str
+    algo: LCMA | None            # None => standard GEMM
+    gemm_seconds: float
+    lcma_seconds: float | None
+    estimates: tuple[LCMAEstimate, ...]
+
+    @property
+    def use_lcma(self) -> bool:
+        return self.algo is not None
+
+    @property
+    def speedup(self) -> float:
+        if self.lcma_seconds is None:
+            return 1.0
+        return self.gemm_seconds / self.lcma_seconds
+
+    @property
+    def seconds(self) -> float:
+        return self.lcma_seconds if self.use_lcma else self.gemm_seconds
+
+
+def _dtype_bytes(dtype: str) -> int:
+    return {"float64": 8, "float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}[dtype]
+
+
+def _pad_up(x: int, d: int) -> int:
+    return ((x + d - 1) // d) * d
+
+
+def gemm_time(M: int, N: int, K: int, hw: HardwareProfile, dtype: str = "bfloat16") -> float:
+    """Standard GEMM roofline time (Eq. 8 dichotomy)."""
+    by = _dtype_bytes(dtype)
+    flops = 2.0 * M * N * K
+    mem = (M * K + K * N + M * N) * by
+    return max(flops / hw.flops_for(dtype), mem / hw.beta)
+
+
+def eq8_is_memory_bound(M: int, N: int, K: int, hw: HardwareProfile, dtype: str = "bfloat16") -> bool:
+    """Paper Eq. 8: when standard GEMM is memory-bound, no LCMA can win."""
+    by = _dtype_bytes(dtype)
+    ai = 2.0 * M * N * K / ((M * K + K * N + M * N) * by)
+    return ai <= hw.flops_for(dtype) / hw.beta
+
+
+def estimate(l: LCMA, M: int, N: int, K: int, hw: HardwareProfile,
+             dtype: str = "bfloat16", fused: bool = True,
+             precombined_b: bool = False,
+             pad_multiple: tuple[int, int, int] = (1, 1, 1)) -> LCMAEstimate:
+    """Per-stage cost of one LCMA application (Table II + fused correction)."""
+    by = _dtype_bytes(dtype)
+    m, k, n, R = l.m, l.k, l.n, l.R
+    # LCMA pays for padding to grid (and optionally kernel-tile) multiples.
+    Mp = _pad_up(M, m * pad_multiple[0])
+    Kp = _pad_up(K, k * pad_multiple[1])
+    Np = _pad_up(N, n * pad_multiple[2])
+    Ms, Ks, Ns = Mp // m, Kp // k, Np // n
+    Fa = hw.flops_add
+    Fx = hw.flops_for(dtype) * hw.lcma_gemm_efficiency
+    stages = []
+
+    def stage(name, flops, nbytes, unit):
+        stages.append(StageCost(name, flops, nbytes, flops / unit, nbytes / hw.beta))
+
+    stage("combine_a", (l.nnz_u - R) * Ms * Ks, (Mp * Kp + R * Ms * Ks) * by, Fa)
+    if not precombined_b:
+        stage("combine_b", (l.nnz_v - R) * Ks * Ns, (Kp * Np + R * Ks * Ns) * by, Fa)
+    gemm_flops = 2.0 * R * Ms * Ns * Ks
+    if fused:
+        # Fused GEMM + Combine H: H stays on-chip; write C exactly once.
+        gemm_bytes = (R * (Ms * Ks + Ks * Ns) + Mp * Np) * by
+        stage("gemm+combine_h", gemm_flops, gemm_bytes, Fx)
+    else:
+        gemm_bytes = R * (Ms * Ks + Ks * Ns + Ms * Ns) * by
+        stage("gemm", gemm_flops, gemm_bytes, Fx)
+        stage("combine_h", (l.nnz_w - m * n) * Ms * Ns, (Mp * Np + R * Ms * Ns) * by, Fa)
+    return LCMAEstimate(l, tuple(stages), (Mp, Np, Kp))
+
+
+def lcma_time(l: LCMA, M: int, N: int, K: int, hw: HardwareProfile, **kw) -> float:
+    return estimate(l, M, N, K, hw, **kw).time
+
+
+def eq10_profitable(l: LCMA, M: int, N: int, K: int, hw: HardwareProfile,
+                    dtype: str = "bfloat16") -> bool:
+    """Paper Eq. 10 closed form (fused; combine stages memory-bound regime)."""
+    by = _dtype_bytes(dtype)
+    m, k, n, R = l.m, l.k, l.n, l.R
+    num = 2.0 * M * N * K * (1.0 - R / (m * n * k))
+    den = (M * K * (1 + R / (m * k)) + N * K * (1 + R / (n * k)) + M * N) * by
+    return num / den > hw.flops_for(dtype) / hw.beta
+
+
+def decide(M: int, N: int, K: int, hw: HardwareProfile, dtype: str = "bfloat16",
+           candidates: list[LCMA] | None = None, fused: bool = True,
+           precombined_b: bool = False,
+           pad_multiple: tuple[int, int, int] = (1, 1, 1),
+           min_speedup: float = 1.0) -> Decision:
+    """Select the best LCMA for (M, N, K) or fall back to standard GEMM."""
+    t_gemm = gemm_time(M, N, K, hw, dtype)
+    if candidates is None:
+        candidates = algorithms.candidates()
+    if eq8_is_memory_bound(M, N, K, hw, dtype):
+        # Eq. 8 fast path: memory-bound GEMM => LCMA cannot win.
+        return Decision(M, N, K, dtype, None, t_gemm, None, ())
+    ests = tuple(
+        estimate(l, M, N, K, hw, dtype, fused=fused, precombined_b=precombined_b,
+                 pad_multiple=pad_multiple)
+        for l in candidates
+    )
+    best = min(ests, key=lambda e: e.time, default=None)
+    if best is not None and best.time * min_speedup < t_gemm:
+        return Decision(M, N, K, dtype, best.lcma, t_gemm, best.time, ests)
+    return Decision(M, N, K, dtype, None, t_gemm, None, ests)
+
+
+def effective_tflops(M: int, N: int, K: int, seconds: float) -> float:
+    """Paper's metric: 2MNK / time — LCMA can exceed the hardware peak."""
+    return 2.0 * M * N * K / seconds / 1e12
+
+
+def predicted_effective_tflops(l: LCMA | None, M: int, N: int, K: int,
+                               hw: HardwareProfile, dtype: str = "bfloat16",
+                               **kw) -> float:
+    t = gemm_time(M, N, K, hw, dtype) if l is None else lcma_time(l, M, N, K, hw, dtype=dtype, **kw)
+    return effective_tflops(M, N, K, t)

@@ -1,0 +1,201 @@
+"""FalconGEMM public API: decision-dispatched LCMA matmul + model integration.
+
+``falcon_matmul(a, b, cfg)`` is the drop-in ``a @ b`` replacement used by the
+model zoo's linear layers (the paper's PyTorch-backend integration, §IV-C):
+
+  1. the Decision Module predicts, from the *static trace-time shapes* (scaled
+     to per-device shapes by ``cfg.shards`` under pjit), whether an LCMA beats
+     standard GEMM on the target hardware,
+  2. if yes, the Deployment Module's generated fused implementation is traced
+     (pure JAX ops -> GSPMD-shardable; or the Pallas kernel pipeline on TPU),
+  3. otherwise it falls back to ``jnp.dot`` — "keep the best performance".
+
+Static weights can be pre-combined offline (``precombine_weights``), removing
+the Combine-B stage from serving entirely (paper §IV-C "offline Combine B").
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import algorithms, codegen, decision as dec
+from .hardware import HardwareProfile, get_profile
+from .lcma import LCMA
+
+log = logging.getLogger(__name__)
+
+__all__ = ["FalconConfig", "falcon_matmul", "falcon_dense", "plan",
+           "precombine_weights", "matmul_with_precombined"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FalconConfig:
+    """Trace-time policy for FalconGEMM dispatch."""
+
+    enabled: bool = True
+    hardware: str = "tpu_v5e"
+    backend: str = "jnp"             # "jnp" | "pallas" | "pallas_interpret"
+    fused: bool = True
+    mode: str = "auto"               # "auto" | "gemm" | explicit scheme name
+    candidates: tuple[str, ...] | None = None
+    min_speedup: float = 1.02        # require a predicted >=2% win before switching
+    max_grid: int = 5
+    # Per-device scaling of (M, K, N) under pjit: number of shards per dim.
+    shards: tuple[int, int, int] = (1, 1, 1)
+
+    @property
+    def profile(self) -> HardwareProfile:
+        return get_profile(self.hardware)
+
+    def candidate_schemes(self) -> list[LCMA]:
+        if self.candidates is not None:
+            return [algorithms.get(n) for n in self.candidates]
+        return algorithms.candidates(max_grid=self.max_grid)
+
+
+def plan(M: int, K: int, N: int, cfg: FalconConfig, dtype: str = "bfloat16",
+         precombined_b: bool = False) -> dec.Decision:
+    """Run the Decision Module for a (possibly sharded) matmul shape."""
+    sm, sk, sn = cfg.shards
+    Ml, Kl, Nl = max(M // sm, 1), max(K // sk, 1), max(N // sn, 1)
+    if cfg.mode == "gemm" or not cfg.enabled:
+        t = dec.gemm_time(Ml, Nl, Kl, cfg.profile, dtype)
+        return dec.Decision(Ml, Nl, Kl, dtype, None, t, None, ())
+    if cfg.mode != "auto":
+        l = algorithms.get(cfg.mode)
+        est = dec.estimate(l, Ml, Nl, Kl, cfg.profile, dtype, fused=cfg.fused,
+                           precombined_b=precombined_b)
+        return dec.Decision(Ml, Nl, Kl, dtype, l,
+                            dec.gemm_time(Ml, Nl, Kl, cfg.profile, dtype),
+                            est.time, (est,))
+    return dec.decide(Ml, Nl, Kl, cfg.profile, dtype,
+                      candidates=cfg.candidate_schemes(), fused=cfg.fused,
+                      precombined_b=precombined_b, min_speedup=cfg.min_speedup)
+
+
+def _pad2(x: jnp.ndarray, d0: int, d1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % d0
+    p1 = (-x.shape[1]) % d1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _lcma_apply(a2: jnp.ndarray, b: jnp.ndarray, l: LCMA, cfg: FalconConfig) -> jnp.ndarray:
+    M, K = a2.shape
+    _, N = b.shape
+    if cfg.backend in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops
+        return ops.falcon_matmul_pallas(
+            a2, b, l, interpret=(cfg.backend == "pallas_interpret"))
+    gen = codegen.generate(l, codegen.CodegenOptions(fused=cfg.fused))
+    ap = _pad2(a2, l.m, l.k)
+    bp = _pad2(b, l.k, l.n)
+    c = gen.fn(ap, bp)
+    return c[:M, :N]
+
+
+def falcon_matmul(a: jnp.ndarray, b: jnp.ndarray, cfg: FalconConfig | None = None,
+                  dtype_hint: str | None = None) -> jnp.ndarray:
+    """``a @ b`` with FalconGEMM dispatch. ``a``: (..., M, K), ``b``: (K, N)."""
+    cfg = cfg or FalconConfig()
+    *lead, M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    Mflat = int(np.prod(lead)) * M if lead else M
+    dtype = dtype_hint or str(a.dtype)
+    d = plan(Mflat, K, N, cfg, dtype)
+    if not d.use_lcma:
+        return jnp.matmul(a, b)
+    a2 = a.reshape(Mflat, K) if lead else a
+    c = _lcma_apply(a2, b, d.algo, cfg)
+    return c.reshape(*lead, M, N) if lead else c
+
+
+def falcon_dense(x: jnp.ndarray, w: jnp.ndarray, cfg: FalconConfig | None = None) -> jnp.ndarray:
+    """Linear layer contraction: x (..., K) @ w (K, N)."""
+    cfg = cfg or FalconConfig()
+    if cfg.backend == "shard_map_local":
+        out = _falcon_dense_shardmap(x, w, cfg)
+        if out is not None:
+            return out
+    *lead, K = x.shape
+    return falcon_matmul(x.reshape(-1, K), w, cfg).reshape(*lead, w.shape[1])
+
+
+def _falcon_dense_shardmap(x: jnp.ndarray, w: jnp.ndarray,
+                           cfg: FalconConfig) -> jnp.ndarray | None:
+    """Apply LCMA to the per-device LOCAL matmul inside ``jax.shard_map``.
+
+    Lesson from EXPERIMENTS.md §Perf A1: LCMA submatrix slicing on a
+    GSPMD-sharded global matmul makes the partitioner reshard every slice
+    (7x collective blow-up). The correct placement is the device-local GEMM:
+    here tokens are sharded over the batch axes, the weight is gathered to a
+    local replica (the same all-gather ZeRO does for the plain matmul), and
+    the Decision Module prices the *local* shapes it actually sees.
+
+    Only supported under ``parallel_style="fsdp_only"`` (no TP: the local
+    contraction is the full K x N). Returns None to fall back otherwise.
+    """
+    from repro.parallel.sharding import get_parallel_style, resolve_batch_axes
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.sharding.get_abstract_mesh()
+    if (mesh is None or not mesh.axis_names
+            or get_parallel_style() != "fsdp_only"):
+        return None
+    sizes = dict(mesh.shape)
+    axes = tuple(a for a in resolve_batch_axes() if a in set(mesh.axis_names))
+    nb = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    *lead, K = x.shape
+    T = int(np.prod(lead))
+    if nb <= 1 or T % nb != 0:
+        return None
+    N = w.shape[1]
+    Tl = T // nb
+    d = plan(Tl, K, N, dataclasses.replace(cfg, shards=(1, 1, 1)),
+             str(x.dtype))
+
+    def body(xl, wl):
+        if d.use_lcma:
+            c = _lcma_apply(xl, wl, d.algo, dataclasses.replace(cfg, backend="jnp"))
+        else:
+            c = jnp.matmul(xl, wl)
+        return c
+
+    # flatten tokens so the (possibly small) batch dim times seq shards over
+    # the full mesh: (B, S, K) -> (B*S, K) with B*S % n_devices == 0
+    xspec = P(axes, None)
+    out = jax.shard_map(
+        body, in_specs=(xspec, P(None, None)),
+        out_specs=xspec, check_vma=False)(x.reshape(T, K), w)
+    return out.reshape(*lead, N)
+
+
+# ---------------------------------------------------------------------------
+# Offline Combine B (static weights, serving path)
+# ---------------------------------------------------------------------------
+
+def precombine_weights(w: jnp.ndarray, l: LCMA) -> jnp.ndarray:
+    """Offline Combine B of a static weight matrix: (K, N) -> (R, K/k, N/n)."""
+    gen = codegen.generate(l, codegen.CodegenOptions(precombined_b=True))
+    return gen.combine_b(_pad2(w, l.k, l.n))
+
+
+def matmul_with_precombined(a: jnp.ndarray, bt: jnp.ndarray, l: LCMA,
+                            n_logical: int, cfg: FalconConfig | None = None) -> jnp.ndarray:
+    """Serving-path matmul against pre-combined weights B̃ (R, K/k, N/n)."""
+    cfg = cfg or FalconConfig()
+    gen = codegen.generate(l, codegen.CodegenOptions(
+        fused=cfg.fused, precombined_b=True))
+    *lead, M, K = a.shape
+    a2 = a.reshape(-1, K)
+    ap = _pad2(a2, l.m, l.k)
+    assert ap.shape[1] // l.k == bt.shape[1], (ap.shape, bt.shape, l.key)
+    c = gen.fn(ap, bt)[: a2.shape[0], :n_logical]
+    return c.reshape(*lead, M, n_logical) if lead else c

@@ -1,0 +1,143 @@
+"""Hardware abstraction for the Decision Module and roofline analysis.
+
+The paper abstracts a platform as ``(FLOPS_x, FLOPS_+, beta)`` (§III-C):
+  * ``FLOPS_x`` — matrix-multiply throughput (MXU / Tensor Core),
+  * ``FLOPS_+`` — elementwise add/sub throughput (VPU / CUDA cores),
+  * ``beta``    — off-chip (HBM) bandwidth for the target dtype.
+
+We extend it with the interconnect and on-chip capacities needed for the
+multi-pod roofline and the Pallas resource planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+__all__ = ["HardwareProfile", "TPU_V5E", "TPU_V5E_POD", "CPU_HOST", "get_profile",
+           "calibrate_cpu"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    flops_mul: float            # FLOPS_x  (per chip, matmul units, bf16 unless noted)
+    flops_add: float            # FLOPS_+  (per chip, vector units)
+    beta: float                 # HBM bytes/s per chip
+    link_bw: float = 50e9       # ICI bytes/s per link per chip
+    hbm_bytes: int = 16 << 30
+    vmem_bytes: int = 16 << 20  # conservative Pallas VMEM budget
+    mxu_align: int = 128        # MXU systolic dimension
+    dtype_flops: dict | None = None  # per-dtype FLOPS_x override
+    # throughput of the R-batched LCMA GEMM relative to one big GEMM
+    # (1.0 on TPU MXU; <1 through XLA-CPU's batched dot — calibrated)
+    lcma_gemm_efficiency: float = 1.0
+
+    def flops_for(self, dtype: str) -> float:
+        if self.dtype_flops and dtype in self.dtype_flops:
+            return self.dtype_flops[dtype]
+        return self.flops_mul
+
+    @property
+    def ridge_intensity(self) -> float:
+        """FLOPS_x / beta — the roofline ridge point (FLOP per byte)."""
+        return self.flops_mul / self.beta
+
+
+# TPU v5e: 197 TFLOP/s bf16 MXU, 819 GB/s HBM, ~50 GB/s/link ICI (per prompt).
+# FLOPS_+ : VPU — 8 ALUs x (8,128) lanes x ~0.94 GHz ~= 7.7 TFLOP/s f32; we use
+# a conservative 4.9 TFLOP/s to absorb load/store issue overheads.
+TPU_V5E = HardwareProfile(
+    name="tpu_v5e",
+    flops_mul=197e12,
+    flops_add=4.9e12,
+    beta=819e9,
+    link_bw=50e9,
+    hbm_bytes=16 << 30,
+    vmem_bytes=16 << 20,
+    dtype_flops={"bfloat16": 197e12, "float32": 49.25e12, "int8": 394e12},
+)
+
+# A full v5e pod slice as used by the dry-run mesh (per-chip numbers identical;
+# kept as a distinct profile so collective constants can differ later).
+TPU_V5E_POD = dataclasses.replace(TPU_V5E, name="tpu_v5e_pod")
+
+# The container host (1 core) — used for *measured* CPU benchmarks, mirroring
+# the paper's CPU (x86/ARM) evaluations. Rough defaults; ``calibrate_cpu``
+# measures the real numbers at benchmark time.
+CPU_HOST = HardwareProfile(
+    name="cpu_host",
+    flops_mul=6.0e10,
+    flops_add=1.5e10,
+    beta=2.0e10,
+    link_bw=1e9,
+    hbm_bytes=32 << 30,
+    vmem_bytes=32 << 20,   # L2/L3 analogue
+    mxu_align=8,
+    dtype_flops=None,
+)
+
+_PROFILES = {p.name: p for p in (TPU_V5E, TPU_V5E_POD, CPU_HOST)}
+
+
+def get_profile(name: str) -> HardwareProfile:
+    return _PROFILES[name]
+
+
+_CPU_CAL_CACHE: dict = {}
+
+
+def calibrate_cpu(size: int = 1024, dtype="float32") -> HardwareProfile:
+    """Measure the host's (FLOPS_x, FLOPS_+, beta) for honest CPU decisions.
+
+    beta is measured from a REAL Group-Combine-A (Strassen) rather than a
+    plain stream add: through XLA-CPU the combine's slice+add+stack pattern
+    reaches only a fraction of stream bandwidth (~3.5 GB/s on this container
+    vs ~10 GB/s stream), and an uncalibrated model mispredicts the LCMA
+    cutoff — a refuted-hypothesis lesson recorded in EXPERIMENTS.md §Perf.
+    """
+    key = (size, str(dtype))
+    if key in _CPU_CAL_CACHE:
+        return _CPU_CAL_CACHE[key]
+    import jax
+    import jax.numpy as jnp
+    from repro.core import algorithms as _alg, codegen as _cg
+
+    a = jnp.ones((size, size), dtype)
+    b = jnp.ones((size, size), dtype)
+    mm = jax.jit(lambda x, y: x @ y)
+    gen = _cg.generate(_alg.get("strassen"))
+    comb = jax.jit(gen.combine_a)
+
+    def best(f, *args, reps=3):
+        f(*args).block_until_ready()
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            f(*args).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    t_mm = best(mm, a, b)
+    t_comb = best(comb, a)
+    flops_mul = 2 * size**3 / t_mm
+    # batched-GEMM efficiency: the LCMA GEMM stage is an R-batched matmul
+    h = size // 2
+    ab = jnp.ones((7, h, h), dtype)
+    bb = jnp.ones((7, h, h), dtype)
+    bmm = jax.jit(lambda x, y: jax.lax.dot_general(
+        x, y, (((2,), (1,)), ((0,), (0,)))))
+    t_bmm = best(bmm, ab, bb)
+    batched_flops = 2 * 7 * h**3 / t_bmm
+    eff = min(batched_flops / flops_mul, 1.0)
+    itemsize = jnp.dtype(dtype).itemsize
+    # Combine-A moves MK reads + R*(M/2)(K/2) writes at the EFFECTIVE rate.
+    comb_bytes = (size * size + 7 * (size // 2) ** 2) * itemsize
+    beta = comb_bytes / t_comb
+    flops_add = beta / itemsize  # 1 add per element at effective bandwidth
+    prof = dataclasses.replace(
+        CPU_HOST, flops_mul=flops_mul, flops_add=flops_add, beta=beta,
+        lcma_gemm_efficiency=eff, name="cpu_host_calibrated",
+    )
+    _CPU_CAL_CACHE[key] = prof
+    _PROFILES[prof.name] = prof  # resolvable via FalconConfig.hardware
+    return prof

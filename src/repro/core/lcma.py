@@ -1,0 +1,130 @@
+"""LCMA: Lower-Complexity Matrix Multiplication Algorithm abstraction.
+
+An LCMA is the tuple ``L = <m, k, n, R, U, V, W>`` (paper §II-A):
+
+  * ``(m, k, n)``  — grid dimensions partitioning (M, K, N),
+  * ``R``          — rank: number of submatrix multiplications (R < m*k*n),
+  * ``U in S^{R x m x k}``, ``V in S^{R x k x n}``, ``W in S^{R x m x n}``
+    — coefficient tensors, S = {-1, 0, 1} for every scheme in this library.
+
+Correctness is the bilinear identity
+
+    sum_r U[r,i,l] * V[r,l',j] * W[r,i',j'] == d(i,i') d(j,j') d(l,l')
+
+which ``validate()`` checks exhaustively (it is exactly "this decomposition
+expresses the <m,k,n> matrix-multiplication tensor with rank R").
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+
+import numpy as np
+
+__all__ = ["LCMA", "validate", "apply_reference"]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: identity hash => usable as a jit static arg
+class LCMA:
+    """A bilinear matrix-multiplication scheme ``<m,k,n,R,U,V,W>``."""
+
+    name: str
+    m: int
+    k: int
+    n: int
+    R: int
+    U: np.ndarray  # (R, m, k) int8
+    V: np.ndarray  # (R, k, n) int8
+    W: np.ndarray  # (R, m, n) int8
+
+    def __post_init__(self):
+        U = np.ascontiguousarray(np.asarray(self.U, dtype=np.int8))
+        V = np.ascontiguousarray(np.asarray(self.V, dtype=np.int8))
+        W = np.ascontiguousarray(np.asarray(self.W, dtype=np.int8))
+        object.__setattr__(self, "U", U)
+        object.__setattr__(self, "V", V)
+        object.__setattr__(self, "W", W)
+        if U.shape != (self.R, self.m, self.k):
+            raise ValueError(f"{self.name}: U shape {U.shape} != {(self.R, self.m, self.k)}")
+        if V.shape != (self.R, self.k, self.n):
+            raise ValueError(f"{self.name}: V shape {V.shape} != {(self.R, self.k, self.n)}")
+        if W.shape != (self.R, self.m, self.n):
+            raise ValueError(f"{self.name}: W shape {W.shape} != {(self.R, self.m, self.n)}")
+        U.setflags(write=False)
+        V.setflags(write=False)
+        W.setflags(write=False)
+
+    # ---- structural properties used by the Decision Module (Table II) ----
+    @property
+    def grid(self) -> tuple[int, int, int]:
+        return (self.m, self.k, self.n)
+
+    @cached_property
+    def nnz_u(self) -> int:
+        return int(np.count_nonzero(self.U))
+
+    @cached_property
+    def nnz_v(self) -> int:
+        return int(np.count_nonzero(self.V))
+
+    @cached_property
+    def nnz_w(self) -> int:
+        return int(np.count_nonzero(self.W))
+
+    @property
+    def mult_saving(self) -> float:
+        """1 - R/(m*k*n): fraction of submatrix multiplications saved."""
+        return 1.0 - self.R / (self.m * self.k * self.n)
+
+    @property
+    def key(self) -> str:
+        return f"<{self.m},{self.k},{self.n}>;R={self.R}"
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"LCMA({self.name}, {self.key}, |U|={self.nnz_u}, |V|={self.nnz_v}, |W|={self.nnz_w})"
+
+    def is_valid(self) -> bool:
+        return validate(self)
+
+
+def validate(l: LCMA, atol: float = 0.0) -> bool:
+    """Exhaustively check the bilinear identity for scheme ``l``.
+
+    T[i,l, l',j, i',j'] = sum_r U[r,i,l] V[r,l',j] W[r,i',j'] must equal the
+    <m,k,n> matmul tensor  d(i,i') d(j,j') d(l,l').
+    """
+    U = l.U.astype(np.int64)
+    V = l.V.astype(np.int64)
+    W = l.W.astype(np.int64)
+    T = np.einsum("ria,rbj,rcd->riabjcd".replace("riabjcd", "iabjcd"), U, V, W)
+    # T has axes (i, a=l, b=l', j, c=i', d=j')
+    m, k, n = l.m, l.k, l.n
+    expect = np.zeros((m, k, k, n, m, n), dtype=np.int64)
+    for i in range(m):
+        for a in range(k):
+            for j in range(n):
+                expect[i, a, a, j, i, j] = 1
+    return bool(np.all(np.abs(T - expect) <= atol))
+
+
+def apply_reference(l: LCMA, A: np.ndarray, B: np.ndarray) -> np.ndarray:
+    """Reference (numpy, staged Algorithm 1) application of an LCMA.
+
+    Requires M % m == 0, K % k == 0, N % n == 0 (the framework pads before
+    reaching this point). Used as the ground-truth oracle in tests.
+    """
+    M, K = A.shape
+    K2, N = B.shape
+    assert K == K2 and M % l.m == 0 and K % l.k == 0 and N % l.n == 0
+    Ms, Ks, Ns = M // l.m, K // l.k, N // l.n
+    # Partition into submatrices.
+    Ap = A.reshape(l.m, Ms, l.k, Ks).transpose(0, 2, 1, 3)  # (m,k,Ms,Ks)
+    Bp = B.reshape(l.k, Ks, l.n, Ns).transpose(0, 2, 1, 3)  # (k,n,Ks,Ns)
+    # Stage 1/2: combine (einsum over the small coefficient tensors).
+    At = np.einsum("rik,ikxy->rxy", l.U.astype(A.dtype), Ap)
+    Bt = np.einsum("rkn,knyz->ryz", l.V.astype(B.dtype), Bp)
+    # Stage 3: R batched multiplications.
+    H = np.einsum("rxy,ryz->rxz", At, Bt)
+    # Stage 4: combine H.
+    Cp = np.einsum("rin,rxz->inxz", l.W.astype(A.dtype), H)
+    return Cp.transpose(0, 2, 1, 3).reshape(M, N)

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticLMData
+
+__all__ = ["DataConfig", "SyntheticLMData"]

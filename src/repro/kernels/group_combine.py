@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: Group Combine A/B (paper Alg. 2, stages 1-2).
+
+One program instance owns the *entire group* ``{Ã_r[x,y]}_{r=1..R}`` at tile
+coordinate ``(x, y)``: it loads the m*k co-located input tiles from HBM into
+VMEM exactly once and produces all R combined tiles on-chip — eliminating the
+redundant A/B loads of H_r-parallel implementations (paper §II-B issue 1).
+
+Coefficients are unrolled into the kernel body at trace time (the Deployment
+Module's "coefficients in I-cache" on TPU: they live in the program, never in
+memory).  The input is consumed directly in ``(M, K)`` layout — each of the
+m*k submatrices is a separate ``BlockSpec`` view of the same array, so no
+relayout/transpose of A is ever materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .tuning import plan_combine_blocks
+
+
+def _combine_kernel(*refs, coeff, nin):
+    in_refs = refs[:nin]
+    out_ref = refs[nin]
+    R = coeff.shape[0]
+    d1, d2 = coeff.shape[1], coeff.shape[2]
+    for r in range(R):
+        acc = None
+        for i in range(d1):
+            for l in range(d2):
+                c = int(coeff[r, i, l])
+                if c == 0:
+                    continue
+                t = in_refs[i * d2 + l][...]
+                t = t if c > 0 else -t
+                acc = t if acc is None else acc + t
+        if acc is None:
+            acc = jnp.zeros_like(out_ref[r])
+        out_ref[r, :, :] = acc
+
+
+def group_combine(x: jnp.ndarray, coeff: np.ndarray, *, block: tuple[int, int] | None = None,
+                  interpret: bool = False) -> jnp.ndarray:
+    """Apply Group Combine to ``x`` of shape (d1*X, d2*Y) -> (R, X, Y).
+
+    ``coeff`` is U (R, m, k) for Combine A (x = A, d1=m, d2=k) or V (R, k, n)
+    for Combine B (x = B, d1=k, d2=n). Dimensions must divide exactly —
+    padding is handled by the caller (`repro.kernels.ops`).
+    """
+    R, d1, d2 = coeff.shape
+    M, K = x.shape
+    assert M % d1 == 0 and K % d2 == 0, (x.shape, coeff.shape)
+    X, Y = M // d1, K // d2
+    bx, by = block or plan_combine_blocks(X, Y, R, d1 * d2, x.dtype)
+    assert X % bx == 0 and Y % by == 0, ((X, Y), (bx, by))
+    grid = (X // bx, Y // by)
+
+    # One BlockSpec view per submatrix of the SAME input array: block (bx, by)
+    # at offset (i*X + x*bx, l*Y + y*by). No relayout of x is materialized.
+    in_specs = []
+    for i in range(d1):
+        for l in range(d2):
+            in_specs.append(
+                pl.BlockSpec(
+                    (bx, by),
+                    functools.partial(
+                        lambda gx, gy, i=i, l=l: (i * (X // bx) + gx, l * (Y // by) + gy)
+                    ),
+                )
+            )
+    out_spec = pl.BlockSpec((R, bx, by), lambda gx, gy: (0, gx, gy))
+
+    kernel = functools.partial(_combine_kernel, coeff=coeff, nin=d1 * d2)
+    fn = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((R, X, Y), x.dtype),
+        interpret=interpret,
+    )
+    return fn(*([x] * (d1 * d2)))

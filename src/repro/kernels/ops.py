@@ -1,0 +1,66 @@
+"""Jitted wrappers around the Pallas kernels (padding, reassembly, dispatch).
+
+``falcon_matmul_pallas`` is the full on-TPU LCMA pipeline:
+  Group Combine A  ->  Group Combine B  ->  fused GEMM + Group Combine H
+with all padding/unpadding handled here so kernels see exact tiles.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lcma import LCMA
+from .fused_gemm import fused_gemm_combine_h, tiled_matmul
+from .group_combine import group_combine
+
+
+def _pad2(x: jnp.ndarray, d0: int, d1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % d0
+    p1 = (-x.shape[1]) % d1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@partial(jax.jit, static_argnames=("l", "block_combine", "block_gemm", "interpret"))
+def falcon_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, l: LCMA,
+                         block_combine: tuple[int, int] | None = None,
+                         block_gemm: tuple[int, int, int] | None = None,
+                         interpret: bool = False) -> jnp.ndarray:
+    """LCMA matmul via the Pallas kernel pipeline. Handles arbitrary shapes."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    # Pad to grid multiples. The K pads of A and B coincide (both are
+    # (-K) % l.k), so the combined operands stay K-consistent. Tile sizes are
+    # chosen on the padded submatrix sizes by the resource planner unless
+    # pinned by the caller.
+    ap = _pad2(a, l.m, l.k)
+    bp = _pad2(b, l.k, l.n)
+    at = group_combine(ap, l.U, block=block_combine, interpret=interpret)
+    bt = group_combine(bp, l.V, block=block_combine, interpret=interpret)
+    cp = fused_gemm_combine_h(at, bt, l.W, block=block_gemm,
+                              out_dtype=a.dtype, interpret=interpret)
+    m, n, X, Z = cp.shape
+    c = cp.transpose(0, 2, 1, 3).reshape(m * X, n * Z)
+    return c[:M, :N]
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
+                  block: tuple[int, int, int] | None = None,
+                  interpret: bool = False) -> jnp.ndarray:
+    """Standard tiled-matmul kernel with padding."""
+    M, K = a.shape
+    _, N = b.shape
+    ap = _pad2(a, 8, 128)
+    bp = _pad2(b, 128, 128)
+    if ap.shape[1] != bp.shape[0]:
+        kp = max(ap.shape[1], bp.shape[0])
+        ap = jnp.pad(ap, ((0, 0), (0, kp - ap.shape[1])))
+        bp = jnp.pad(bp, ((0, kp - bp.shape[0]), (0, 0)))
+    c = tiled_matmul(ap, bp, block=block, interpret=interpret)
+    return c[:M, :N]

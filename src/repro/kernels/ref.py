@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lcma import LCMA
+
+
+def group_combine_ref(parts: jnp.ndarray, coeff: np.ndarray) -> jnp.ndarray:
+    """parts: (d1, d2, X, Y); coeff: (R, d1, d2) -> (R, X, Y).
+
+    Oracle for the Group Combine A/B kernels (Eq. 3/4): every rank-r output
+    tile is the coefficient-weighted sum of the co-located input tiles.
+    """
+    c = jnp.asarray(coeff, parts.dtype)
+    return jnp.einsum("ril,ilxy->rxy", c, parts)
+
+
+def fused_gemm_combine_h_ref(at: jnp.ndarray, bt: jnp.ndarray, w: np.ndarray,
+                             out_dtype=None) -> jnp.ndarray:
+    """at: (R, X, Y); bt: (R, Y, Z); w: (R, m, n) -> C parts (m, n, X, Z).
+
+    Oracle for the fused GEMM + Group Combine H kernel (Eq. 5+6): H is kept
+    in float32 and combined into C without materialization.
+    """
+    out_dtype = out_dtype or at.dtype
+    h = jnp.einsum("rxy,ryz->rxz", at.astype(jnp.float32), bt.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    c = jnp.einsum("rmn,rxz->mnxz", jnp.asarray(w, jnp.float32), h)
+    return c.astype(out_dtype)
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def lcma_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, l: LCMA, out_dtype=None) -> jnp.ndarray:
+    """End-to-end oracle: partition -> combine -> fused gemm+H -> reassemble."""
+    out_dtype = out_dtype or a.dtype
+    M, K = a.shape
+    K2, N = b.shape
+    assert M % l.m == 0 and K % l.k == 0 and N % l.n == 0
+    X, Y, Z = M // l.m, K // l.k, N // l.n
+    ap = a.reshape(l.m, X, l.k, Y).transpose(0, 2, 1, 3)
+    bp = b.reshape(l.k, Y, l.n, Z).transpose(0, 2, 1, 3)
+    at = group_combine_ref(ap, l.U)
+    bt = group_combine_ref(bp, l.V)
+    cp = fused_gemm_combine_h_ref(at, bt, l.W, out_dtype=out_dtype)
+    return cp.transpose(0, 2, 1, 3).reshape(M, N)

@@ -1,0 +1,76 @@
+"""On-chip Resource Planning (paper §III-A micro-optimization 1).
+
+Evaluates the VMEM footprint a kernel configuration will claim and shrinks
+block shapes until the plan fits the hardware budget, keeping MXU dimensions
+aligned to the systolic array (multiples of 128 where the problem allows).
+High-rank schemes (e.g. <4,4,4>;49) hit the budget first through the
+``(R, bx, bz)`` float32 accumulator — exactly the failure AlphaTensor's large-R
+kernels hit on GPU shared memory (paper §IV-C); the planner degrades block
+sizes instead of falling back to Strassen.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Conservative per-core VMEM budget (bytes) for kernel working sets; the
+# Pallas pipeline double-buffers in/out blocks, which the estimates include.
+VMEM_BUDGET = 12 << 20
+MXU = 128
+
+
+def _align_candidates(dim: int, mxu: int = MXU) -> list[int]:
+    """Block-size candidates for a dimension: MXU multiples, then divisors."""
+    cands = [c for c in (512, 384, 256, 128) if dim % c == 0]
+    if not cands:
+        cands = [d for d in range(min(dim, 512), 0, -1) if dim % d == 0]
+    return cands
+
+
+def combine_vmem(bx: int, by: int, R: int, nparts: int, itemsize: int) -> int:
+    # double-buffered: nparts input blocks + R output blocks
+    return 2 * (nparts + R) * bx * by * itemsize
+
+
+def plan_combine_blocks(X: int, Y: int, R: int, nparts: int, dtype,
+                        budget: int = VMEM_BUDGET) -> tuple[int, int]:
+    it = jnp.dtype(dtype).itemsize
+    best = None
+    for bx in _align_candidates(X):
+        for by in _align_candidates(Y):
+            if combine_vmem(bx, by, R, nparts, it) <= budget:
+                cand = (bx, by)
+                if best is None or bx * by > best[0] * best[1]:
+                    best = cand
+    if best is None:
+        best = (_align_candidates(X)[-1], _align_candidates(Y)[-1])
+    return best
+
+
+def fused_gemm_vmem(bx: int, bz: int, by: int, R: int, m: int, n: int,
+                    itemsize: int, acc_itemsize: int = 4) -> int:
+    io = 2 * R * (bx * by + by * bz) * itemsize   # double-buffered At/Bt blocks
+    acc = R * bx * bz * acc_itemsize              # persistent accumulator
+    out = 2 * m * n * bx * bz * itemsize          # double-buffered C parts
+    return io + acc + out
+
+
+def plan_fused_gemm_blocks(X: int, Z: int, Y: int, R: int, m: int, n: int, dtype,
+                           budget: int = VMEM_BUDGET) -> tuple[int, int, int]:
+    """Pick (bx, bz, by) fitting the budget, preferring large MXU-aligned tiles."""
+    it = jnp.dtype(dtype).itemsize
+    best, best_score = None, -1.0
+    for bx in _align_candidates(X):
+        for bz in _align_candidates(Z):
+            for by in _align_candidates(Y):
+                if fused_gemm_vmem(bx, bz, by, R, m, n, it) > budget:
+                    continue
+                # score: MXU utilization proxy — prefer 128-multiples and
+                # larger K-blocks (fewer accumulator passes).
+                score = bx * bz * min(by, 512)
+                if bx % MXU == 0 and bz % MXU == 0:
+                    score *= 4
+                if score > best_score:
+                    best, best_score = (bx, bz, by), score
+    if best is None:
+        best = (_align_candidates(X)[-1], _align_candidates(Z)[-1], _align_candidates(Y)[-1])
+    return best

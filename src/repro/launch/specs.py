@@ -1,0 +1,174 @@
+"""ShapeDtypeStruct input specs for every (arch x shape-cell) dry-run cell.
+
+Everything here is abstract (no allocation): parameters and optimizer state
+come from ``jax.eval_shape`` over the real init functions, inputs are
+ShapeDtypeStructs with NamedShardings attached. The dry-run lowers the exact
+step functions used by training/serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell, SHAPE_CELLS
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init
+from repro.parallel import sharding as SH
+
+__all__ = ["cell_applicable", "input_specs", "abstract_state", "CellSpec"]
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> tuple[bool, str]:
+    if cell.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: 500k decode needs "
+                       "sub-quadratic attention (DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def attach(tree_sds, tree_shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_sds, tree_shardings)
+
+
+@dataclasses.dataclass
+class CellSpec:
+    kind: str                 # train | prefill | decode
+    args: tuple               # positional SDS args for the step fn
+    params: object            # params SDS (with shardings)
+    opt_state: object | None
+    rules: SH.ShardingRules
+    n_params: int
+    n_active_params: int
+
+
+def _param_count(params_sds) -> tuple[int, int]:
+    """(total, active) param counts; MoE experts count k/E of their size."""
+    total = active = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(params_sds)
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        n = int(np.prod(leaf.shape))
+        total += n
+        active += n  # corrected below for experts by caller (needs cfg)
+    return total, active
+
+
+def abstract_state(cfg: ModelConfig, mesh: Mesh, need_opt: bool,
+                   seq_shard: bool = False, opt_dtype: str = "float32"):
+    rules = SH.make_rules(mesh, fsdp=cfg.fsdp, seq_shard=seq_shard,
+                          style=cfg.parallel_style)
+    params_sds = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    params_sh = SH.param_sharding(params_sds, mesh, rules)
+    params = attach(params_sds, params_sh)
+    opt = None
+    if need_opt:
+        opt_sds = jax.eval_shape(
+            lambda p: adamw_init(p, AdamWConfig(state_dtype=opt_dtype)), params_sds)
+        opt_sh = {
+            "m": params_sh, "v": params_sh,
+            "step": NamedSharding(mesh, P()),
+        }
+        opt = attach(opt_sds, opt_sh)
+    # param counts (total vs active for MoE)
+    total = 0
+    expert = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(params_sds)
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "moe_" in pstr:
+            expert += n
+    active = total - expert
+    if cfg.num_experts:
+        active += expert * cfg.experts_per_token // cfg.num_experts
+    return params, opt, rules, total, active
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                opt_dtype: str = "float32") -> CellSpec:
+    ok, why = cell_applicable(cfg, cell)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {cell.name} skipped: {why}")
+    seq_shard = cell.name == "long_500k"
+    params, opt, rules, total, active = abstract_state(
+        cfg, mesh, need_opt=(cell.kind == "train"), seq_shard=seq_shard,
+        opt_dtype=opt_dtype)
+    b_axes = rules.batch
+    B, S = cell.global_batch, cell.seq_len
+    sizes = dict(rules.axis_sizes)
+    nb = int(np.prod([sizes.get(a, 1) for a in b_axes]))
+    batch_axis = b_axes if B % nb == 0 else None
+
+    def tok_sds(shape):
+        spec = (batch_axis,) + (None,) * (len(shape) - 1)
+        return _sds(shape, jnp.int32, NamedSharding(mesh, P(*spec)))
+
+    extra = {}
+    if cfg.frontend == "audio_codebooks":
+        mk_tokens = lambda s: tok_sds((B, s, cfg.num_codebooks))
+    else:
+        mk_tokens = lambda s: tok_sds((B, s))
+
+    if cell.kind == "train":
+        s_text = S - cfg.num_patches if cfg.frontend == "vision_patches" else S
+        batch = {"tokens": mk_tokens(s_text), "labels": mk_tokens(s_text)}
+        if cfg.frontend == "vision_patches":
+            batch["patch_embeds"] = _sds(
+                (B, cfg.num_patches, cfg.d_model), jnp.dtype(cfg.dtype),
+                NamedSharding(mesh, P(batch_axis, None, None)))
+        step_sds = _sds((), jnp.int32, NamedSharding(mesh, P()))
+        args = (params, opt, batch, step_sds)
+        return CellSpec("train", args, params, opt, rules, total, active)
+
+    if cell.kind == "prefill":
+        s_text = S - cfg.num_patches if cfg.frontend == "vision_patches" else S
+        args = [params, mk_tokens(s_text)]
+        if cfg.frontend == "vision_patches":
+            args.append(_sds((B, cfg.num_patches, cfg.d_model), jnp.dtype(cfg.dtype),
+                             NamedSharding(mesh, P(batch_axis, None, None))))
+        return CellSpec("prefill", tuple(args), params, None, rules, total, active)
+
+    # decode: one new token against an S-long cache.
+    # KV cache layout (L, B, S, Hkv, hd): batch over the DP axes; the model
+    # axis goes on KV heads when divisible, else on the SEQUENCE (sequence-
+    # parallel KV cache — required when Hkv < model parallelism, and for
+    # long_500k where batch=1 offers no parallelism at all).
+    cache_sds = jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+    nmodel = sizes.get("model", 1)
+    if cell.name == "long_500k":
+        kv_spec = [None, None, ("data", "model"), None, None]
+        st_spec = [None, None, "model", None, None]
+    elif cfg.num_kv_heads % max(nmodel, 1) == 0 and cfg.num_kv_heads:
+        kv_spec = [None, batch_axis, None, "model", None]
+        st_spec = [None, batch_axis, "model", None, None]
+    else:
+        kv_spec = [None, batch_axis, "model", None, None]
+        st_spec = [None, batch_axis, "model", None, None]
+    cache_sh = {}
+    for k in cache_sds:
+        dims = cache_sds[k].shape
+        spec = kv_spec if k in ("k", "v") else st_spec
+        spec = [a if a is None or dims[i] % _axsize(rules, a) == 0 else None
+                for i, a in enumerate(spec)]
+        cache_sh[k] = NamedSharding(mesh, P(*spec))
+    cache = attach(cache_sds, cache_sh)
+    tokens = mk_tokens(1)
+    index = _sds((), jnp.int32, NamedSharding(mesh, P()))
+    return CellSpec("decode", (params, cache, tokens, index), params, None,
+                    rules, total, active)
+
+
+def _axsize(rules: SH.ShardingRules, axis) -> int:
+    sizes = dict(rules.axis_sizes)
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    return int(np.prod([sizes.get(a, 1) for a in axes]))

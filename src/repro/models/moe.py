@@ -1,0 +1,170 @@
+"""Mixture-of-Experts layer: top-k routing, capacity dispatch, EP sharding.
+
+Two dispatch paths:
+
+  * ``_moe_shardmap`` (production, used whenever a mesh with a "model" axis is
+    active): experts are sharded over "model", tokens over ("pod","data").
+    Inside ``jax.shard_map`` each device routes its *local* tokens to its
+    *local* experts — the dispatch scatter never crosses devices, the only
+    collectives are an (T_loc, E) router-logit all-gather and the final psum
+    that sums each token's k expert contributions across the EP shards.
+    GSPMD is never asked to partition a giant scatter (which it does by
+    replication — measured 1.1 TB/device on kimi-k2 before this path).
+
+  * ``_moe_dense`` (fallback without a mesh: CPU smoke tests, examples).
+
+Per-expert projections go through FalconGEMM; with small per-expert M the
+Decision Module falls back to standard GEMM — that is the intended behavior.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.falcon_gemm import FalconConfig, falcon_matmul
+from repro.parallel.sharding import BATCH, resolve_batch_axes, shard_act
+from .layers import dense_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, d: int, d_ff: int, num_experts: int, dtype) -> dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, d, num_experts, dtype),
+        "moe_gate": (jax.random.normal(kg, (num_experts, d, d_ff), jnp.float32)
+                     / np.sqrt(d)).astype(dtype),
+        "moe_up": (jax.random.normal(ku, (num_experts, d, d_ff), jnp.float32)
+                   / np.sqrt(d)).astype(dtype),
+        "moe_down": (jax.random.normal(kd, (num_experts, d_ff, d), jnp.float32)
+                     / np.sqrt(d_ff)).astype(dtype),
+    }
+
+
+def _expert_ffn(p_gate, p_up, p_down, xb: jnp.ndarray, fcfg: FalconConfig) -> jnp.ndarray:
+    """xb: (E, C, d) -> (E, C, d). Batched per-expert SwiGLU via vmap'd falcon."""
+    def one(x, wg, wu, wd):
+        g = falcon_matmul(x, wg, fcfg)
+        u = falcon_matmul(x, wu, fcfg)
+        return falcon_matmul(jax.nn.silu(g) * u, wd, fcfg)
+
+    return jax.vmap(one)(xb, p_gate, p_up, p_down)
+
+
+def _route(xt, router_logits, top_k):
+    probs = jax.nn.softmax(router_logits, axis=-1)            # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)       # (T, k)
+    gate_vals = gate_vals / jnp.clip(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    return probs, gate_vals, expert_idx
+
+
+def _aux_loss(probs, expert_idx, E):
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    return E * jnp.sum(me * ce)
+
+
+def _dispatch_compute_combine(xt, probs, gate_vals, expert_idx, C, p_gate,
+                              p_up, p_down, fcfg, E_local, e_offset):
+    """Token-local dispatch into (E_local, C, d), FFN, weighted combine.
+
+    Per-slot loop (k is small) so no (T*k, d) token replication is ever
+    materialized.
+    """
+    T, d = xt.shape
+    top_k = expert_idx.shape[1]
+    e_rel = expert_idx - e_offset
+    local = (e_rel >= 0) & (e_rel < E_local)
+    e_rel = jnp.clip(e_rel, 0, E_local - 1)
+    oh = jax.nn.one_hot(e_rel, E_local, dtype=jnp.int32) * local[..., None].astype(jnp.int32)
+    flat = oh.reshape(T * top_k, E_local)
+    pos_all = jnp.cumsum(flat, axis=0) - flat
+    pos = jnp.sum(pos_all * flat, axis=-1).reshape(T, top_k)
+    keep = local & (pos < C)
+
+    buf = jnp.zeros((E_local, C, d), xt.dtype)
+    for s in range(top_k):
+        w = keep[:, s].astype(xt.dtype)[:, None]
+        buf = buf.at[e_rel[:, s], jnp.where(keep[:, s], pos[:, s], C - 1)].add(
+            xt * w, mode="drop")
+
+    yb = _expert_ffn(p_gate, p_up, p_down, buf, fcfg)          # (E_local, C, d)
+
+    y = jnp.zeros_like(xt)
+    for s in range(top_k):
+        contrib = yb[e_rel[:, s], jnp.where(keep[:, s], pos[:, s], C - 1)]
+        w = (gate_vals[:, s] * keep[:, s].astype(gate_vals.dtype)).astype(xt.dtype)
+        y = y + contrib * w[:, None]
+    return y
+
+
+def _moe_dense(p, x, top_k, C, fcfg):
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    xt = x.reshape(B * S, d)
+    logits = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs, gate_vals, expert_idx = _route(xt, logits, top_k)
+    y = _dispatch_compute_combine(xt, probs, gate_vals, expert_idx, C,
+                                  p["moe_gate"], p["moe_up"], p["moe_down"],
+                                  fcfg, E_local=E, e_offset=0)
+    return y.reshape(B, S, d), _aux_loss(probs, expert_idx, E)
+
+
+def _moe_shardmap(p, x, top_k, C_global, fcfg, mesh):
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    names = set(mesh.axis_names)
+    # use all present batch axes only if B divides them
+    present = tuple(a for a in resolve_batch_axes() if a in names)
+    dp = int(np.prod([dict(mesh.shape)[a] for a in present])) if present else 1
+    dp_axes = present if (present and B % dp == 0) else ()
+    dp = int(np.prod([dict(mesh.shape)[a] for a in dp_axes])) if dp_axes else 1
+    nm = dict(mesh.shape).get("model", 1)
+    E_local = E // nm
+    C_local = max(int(np.ceil(C_global / dp)), 8)
+
+    xspec = P(dp_axes if dp_axes else None, None, None)
+
+    def body(x_loc, router_loc, wg, wu, wd):
+        Bl, Sl, _ = x_loc.shape
+        xt = x_loc.reshape(Bl * Sl, d)
+        # local router slice -> all-gather logits over the EP axis
+        logits_loc = xt.astype(jnp.float32) @ router_loc.astype(jnp.float32)
+        logits = jax.lax.all_gather(logits_loc, "model", axis=1, tiled=True)
+        probs, gate_vals, expert_idx = _route(xt, logits, top_k)
+        midx = jax.lax.axis_index("model")
+        y = _dispatch_compute_combine(
+            xt, probs, gate_vals, expert_idx, C_local, wg, wu, wd, fcfg,
+            E_local=E_local, e_offset=midx * E_local)
+        # sum each token's k expert contributions across EP shards
+        y = jax.lax.psum(y, "model")
+        aux = _aux_loss(probs, expert_idx, E)
+        if dp_axes:
+            aux = jax.lax.pmean(aux, dp_axes)
+        return y.reshape(Bl, Sl, d), aux
+
+    out, aux = jax.shard_map(
+        body,
+        in_specs=(xspec, P(None, "model"), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(xspec, P()),
+        check_vma=False,
+    )(x, p["router"], p["moe_gate"], p["moe_up"], p["moe_down"])
+    return out, aux
+
+
+def moe_apply(p: dict, x: jnp.ndarray, top_k: int, capacity_factor: float,
+              fcfg: FalconConfig, deterministic_capacity: int | None = None):
+    """x: (B, S, d) -> (y, aux_loss). Token-drop capacity MoE (Switch-style)."""
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    T = B * S
+    C = deterministic_capacity or max(int(np.ceil(T * top_k / E * capacity_factor)), 8)
+    from repro.parallel.sharding import get_parallel_style
+    mesh = jax.sharding.get_abstract_mesh()
+    nm = dict(mesh.shape).get("model", 1) if (mesh and mesh.axis_names) else 1
+    if nm > 1 and E % nm == 0 and get_parallel_style() == "tp":
+        return _moe_shardmap(p, x, top_k, C, fcfg, mesh)
+    return _moe_dense(p, x, top_k, C, fcfg)

@@ -1,0 +1,158 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked scan + decode recurrence.
+
+Implements the SSD algorithm of Dao & Gu (2024): within-chunk quadratic
+attention-like form + inter-chunk state recurrence, all in einsums so the MXU
+does the heavy lifting. The in/out projections are FalconGEMM-backed (the
+paper's technique applies to the GEMMs around the scan; the scan itself is
+not a GEMM — noted in DESIGN.md §Arch-applicability).
+
+Shapes: x (B, L, H, P) values; dt (B, L, H) step sizes; A (H,) decay rates;
+B_, C_ (B, L, G, N) input/output projections with H % G == 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.falcon_gemm import FalconConfig, falcon_dense
+from repro.parallel.sharding import BATCH, shard_act
+from .layers import dense_init
+
+__all__ = ["ssd_init", "ssd_apply", "ssd_decode_step", "ssd_scan"]
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{j < s <= i} a[..., s]."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(x, dt, A, B_, C_, chunk: int, init_state=None):
+    """Chunked SSD. Returns (y, final_state).
+
+    x: (B, L, H, P); dt: (B, L, H); A: (H,); B_, C_: (B, L, G, N).
+    state: (B, H, N, P).
+    """
+    Bb, L, H, Pd = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Lp = -(-L // chunk) * chunk
+    if Lp != L:
+        # zero-pad the tail: dt=0 => decay 1 and no state contribution, so
+        # the final state equals the unpadded one; padded outputs are sliced.
+        pad = Lp - L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = Lp // chunk
+
+    # fold dt into x (discretization) and build log-decay per step
+    xdt = x * dt[..., None]
+    a = (dt * (-jnp.exp(A))[None, None, :]).astype(jnp.float32)  # (B, L, H), negative
+
+    def r(t, d):  # reshape into chunks
+        return t.reshape((Bb, nc, chunk) + t.shape[2:])
+
+    xc, ac = r(xdt, 3), r(a, 3)
+    Bc, Cc = r(B_, 4), r(C_, 4)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B, nc, c, H, N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    ac_t = ac.transpose(0, 1, 3, 2)              # (B, nc, H, c)
+    Lmat = jnp.exp(_segsum(ac_t))                # (B, nc, H, c, c)
+    # intra-chunk (diagonal block) output
+    scores = jnp.einsum("bnihs,bnjhs->bnhij", Ch.astype(jnp.float32),
+                        Bh.astype(jnp.float32))  # (B, nc, H, c, c)
+    y_diag = jnp.einsum("bnhij,bnhij,bnjhp->bnihp", scores, Lmat,
+                        xc.astype(jnp.float32))
+
+    # chunk-end states: decay from position j to the end of its chunk
+    decay_to_end = jnp.exp(jnp.sum(ac_t, -1, keepdims=True) - jnp.cumsum(ac_t, -1))
+    # states[n] = sum_j decay_to_end[j] * B[j] x[j]   -> (B, nc, H, N, P)
+    states = jnp.einsum("bnhj,bnjhs,bnjhp->bnhsp", decay_to_end,
+                        Bh.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(jnp.sum(ac_t, axis=-1))  # (B, nc, H)
+    s0 = (jnp.zeros((Bb, H, N, Pd), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(s, inp):
+        st, dk = inp  # (B, H, N, P), (B, H)
+        s_new = s * dk[..., None, None] + st
+        return s_new, s
+
+    (s_final, prev_states) = jax.lax.scan(
+        body, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B, nc, H, N, P)
+
+    # contribution of the carried-in state to each position
+    decay_from_start = jnp.exp(jnp.cumsum(ac_t, -1))    # (B, nc, H, c)
+    y_off = jnp.einsum("bnihs,bnhsp,bnhi->bnihp", Ch.astype(jnp.float32),
+                       prev_states, decay_from_start)
+
+    y = (y_diag + y_off).reshape(Bb, Lp, H, Pd)[:, :L].astype(x.dtype)
+    return y, s_final.astype(x.dtype)
+
+
+def ssd_decode_step(x, dt, A, B_, C_, state):
+    """Single-token recurrence. x: (B,1,H,P); state: (B,H,N,P)."""
+    a = jnp.exp(dt[:, 0] * (-jnp.exp(A))[None, :])        # (B, H)
+    G = B_.shape[2]
+    rep = x.shape[2] // G
+    Bh = jnp.repeat(B_[:, 0], rep, axis=1)                # (B, H, N)
+    Ch = jnp.repeat(C_[:, 0], rep, axis=1)
+    xdt = (x[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)
+    new_state = (state.astype(jnp.float32) * a[..., None, None]
+                 + jnp.einsum("bhs,bhp->bhsp", Bh.astype(jnp.float32), xdt))
+    y = jnp.einsum("bhs,bhsp->bhp", Ch.astype(jnp.float32), new_state)
+    return y[:, None].astype(x.dtype), new_state.astype(x.dtype)
+
+
+def ssd_init(key, d_model: int, ssm_state: int, n_heads: int, head_dim: int,
+             n_groups: int, dtype) -> dict:
+    d_inner = n_heads * head_dim
+    ki, ko, kd = jax.random.split(key, 3)
+    # in_proj packs [z (d_inner gate) | x (d_inner) | B (G*N) | C (G*N) | dt (H)]
+    d_in_proj = 2 * d_inner + 2 * n_groups * ssm_state + n_heads
+    return {
+        "ssm_in": dense_init(ki, d_model, d_in_proj, dtype),
+        "ssm_out": dense_init(ko, d_inner, d_model, dtype),
+        "ssm_A": jnp.zeros((n_heads,), jnp.float32),       # log decay init ~ 1
+        "ssm_D": jnp.ones((n_heads,), jnp.float32),
+        "ssm_dt_bias": jnp.zeros((n_heads,), jnp.float32),
+    }
+
+
+def ssd_apply(p: dict, x: jnp.ndarray, cfg, fcfg: FalconConfig,
+              state=None, decode: bool = False):
+    """x: (B, L, d_model) -> (y, new_state)."""
+    B, L, _ = x.shape
+    H, Pd, G, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    proj = falcon_dense(x, p["ssm_in"], fcfg)
+    d_inner = H * Pd
+    z = shard_act(proj[..., :d_inner], BATCH, None, "model")   # gate branch
+    off = d_inner
+    xs = shard_act(proj[..., off:off + d_inner].reshape(B, L, H, Pd),
+                   BATCH, None, "model", None)
+    off += d_inner
+    B_ = proj[..., off:off + G * N].reshape(B, L, G, N)
+    off += G * N
+    C_ = proj[..., off:off + G * N].reshape(B, L, G, N)
+    off += G * N
+    dt = jax.nn.softplus(proj[..., off:].astype(jnp.float32)
+                         + p["ssm_dt_bias"][None, None])       # (B, L, H)
+    if decode:
+        y, new_state = ssd_decode_step(xs, dt, p["ssm_A"], B_, C_, state)
+    else:
+        y, new_state = ssd_scan(xs, dt, p["ssm_A"], B_, C_, cfg.ssm_chunk,
+                                init_state=state)
+    y = y + xs * p["ssm_D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, L, d_inner) * jax.nn.silu(z)  # mamba2 output gate
+    y = falcon_dense(y, p["ssm_out"], fcfg)
+    return shard_act(y, BATCH, None, None), new_state

@@ -1,0 +1,152 @@
+"""Three-term roofline analysis from compiled XLA artifacts.
+
+  compute term    = HLO_FLOPs / (chips x peak FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM bw)
+  collective term = collective_bytes / (chips x link bw)
+
+``compiled.cost_analysis()`` reports *per-partition* FLOPs/bytes after SPMD
+partitioning (verified empirically), so no chip division is applied to those.
+Collective bytes are parsed from the compiled HLO text: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute op
+we sum the result-shape bytes, with an op-specific traffic multiplier
+(all-reduce counts 2x for its reduce-scatter + all-gather ring phases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.core.hardware import HardwareProfile, TPU_V5E
+
+__all__ = ["RooflineReport", "collective_bytes", "analyze_compiled"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ring traffic per device relative to result bytes
+_MULTIPLIER = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum per-op collective traffic (bytes, multiplier applied) by op kind."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        # async pairs: count -start, skip -done (same shapes)
+        if hlo_text[m.end() - 6:m.end() - 1].endswith("done"):
+            continue
+        out[op] += _shape_bytes(shapes) * _MULTIPLIER[op]
+        counts[op] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float              # per device
+    hlo_bytes: float              # per device
+    coll_bytes: float             # per device
+    coll_by_kind: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float            # 6ND / 2ND analytic, GLOBAL
+    useful_ratio: float           # model_flops / (hlo_flops * chips)
+    bytes_per_device: float       # from memory_analysis
+    peak_flops: float
+    notes: str = ""
+
+    @property
+    def step_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable useful-FLOPs fraction of peak: how close the step is to
+        the compute roofline, discounted by non-useful compiled FLOPs."""
+        if self.step_time <= 0:
+            return 0.0
+        useful_per_dev = self.model_flops / self.chips
+        return useful_per_dev / self.step_time / self.peak_flops
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["step_time"] = self.step_time
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops: float,
+                     hw: HardwareProfile = TPU_V5E,
+                     dtype: str = "bfloat16", notes: str = "") -> RooflineReport:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    counts = coll.pop("_counts")
+    total_coll = float(sum(coll.values()))
+    ma = compiled.memory_analysis()
+    bytes_per_dev = float(
+        getattr(ma, "argument_size_in_bytes", 0)
+        + getattr(ma, "output_size_in_bytes", 0)
+        + getattr(ma, "temp_size_in_bytes", 0)
+        - getattr(ma, "alias_size_in_bytes", 0))
+    peak = hw.flops_for(dtype)
+    t_comp = flops / peak
+    t_mem = byts / hw.beta
+    t_coll = total_coll / hw.link_bw
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, coll_bytes=total_coll,
+        coll_by_kind={**coll, "counts": counts},
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_ratio=(model_flops / (flops * chips)) if flops else 0.0,
+        bytes_per_device=bytes_per_dev, peak_flops=peak, notes=notes,
+    )

@@ -1,0 +1,5 @@
+from .steps import make_train_step, make_eval_step, make_prefill_step, make_decode_step
+from .loop import TrainLoop, TrainLoopConfig, FaultInjector
+
+__all__ = ["make_train_step", "make_eval_step", "make_prefill_step",
+           "make_decode_step", "TrainLoop", "TrainLoopConfig", "FaultInjector"]

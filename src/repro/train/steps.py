@@ -1,0 +1,140 @@
+"""Step functions: train (fwd+bwd+AdamW), eval, prefill, decode.
+
+All steps are pure functions of (params, opt_state, batch, step) so they jit
+and pjit cleanly; the launch layer attaches in/out shardings. The compressed-
+DP variant computes gradients inside ``shard_map`` and replaces the implicit
+GSPMD gradient all-reduce with the int8 collective from
+``repro.parallel.compression``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.parallel.compression import compressed_psum_mean
+
+__all__ = ["make_train_step", "make_eval_step", "make_prefill_step",
+           "make_decode_step", "make_compressed_dp_train_step"]
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    total_steps: int = 10_000, warmup: int = 100,
+                    fcfg=None, microbatches: int = 1):
+    """fwd+bwd+AdamW step. ``microbatches > 1`` enables gradient accumulation:
+    the global batch is scanned in chunks with an f32 grad accumulator —
+    activation memory scales with the microbatch while the optimizer sees the
+    full batch (how large global batches ride on fixed per-device memory)."""
+
+    def grad_of(params, batch):
+        def loss_fn(p):
+            return M.lm_loss(p, cfg, batch, fcfg)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch, step):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            def split(x):
+                n = microbatches
+                assert x.shape[0] % n == 0, (x.shape, n)
+                return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+            mbatch = {k: split(v) for k, v in batch.items()}
+            gacc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = grad_of(params, mb)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), None
+
+            (gacc, lsum), _ = jax.lax.scan(
+                body, (gacc0, jnp.zeros((), jnp.float32)), mbatch)
+            grads = jax.tree.map(lambda g: g / microbatches, gacc)
+            loss = lsum / microbatches
+            metrics = {}
+        lr_scale = cosine_schedule(step, warmup, total_steps)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg,
+                                             lr_scale=lr_scale)
+        out = {"loss": loss, "lr_scale": lr_scale, **metrics, **om}
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, fcfg=None):
+    def eval_step(params, batch):
+        loss, metrics = M.lm_loss(params, cfg, batch, fcfg)
+        return {"loss": loss, **metrics}
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, fcfg=None):
+    """Single-pass prefill: fills the KV cache AND returns last-token logits."""
+    def prefill_step(params, tokens, patch_embeds=None):
+        B = tokens.shape[0]
+        cache = M.init_cache(cfg, B, max_len)
+        logits, cache, _ = M.forward(params, cfg, tokens,
+                                     patch_embeds=patch_embeds, cache=cache,
+                                     cache_index=0, fcfg=fcfg,
+                                     logits_mode="last")
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, fcfg=None):
+    """One-token decode against a KV cache at position ``index``."""
+    def decode_step(params, cache, tokens, index):
+        logits, new_cache, _ = M.forward(params, cfg, tokens, cache=cache,
+                                         cache_index=index, fcfg=fcfg,
+                                         logits_mode="last")
+        return logits, new_cache
+
+    return decode_step
+
+
+def make_compressed_dp_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh,
+                                  bits: int = 8, fcfg=None,
+                                  total_steps: int = 10_000, warmup: int = 100):
+    """Pure-DP train step with int8-compressed gradient all-reduce.
+
+    Params replicated, batch sharded over the DP axes; grads are computed
+    per-shard inside shard_map and synced with the compressed collective.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    batch_spec = P(dp_axes)
+
+    def sharded_grads(params, batch):
+        def loss_fn(p):
+            return M.lm_loss(p, cfg, batch, fcfg)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads = compressed_psum_mean(grads, dp_axes, bits=bits)
+        loss = jax.lax.pmean(loss, dp_axes)
+        return loss, metrics, grads
+
+    smapped = shard_map(
+        sharded_grads, mesh=mesh,
+        in_specs=(P(), {"tokens": batch_spec, "labels": batch_spec}),
+        out_specs=(P(), P(), P()),
+        check_rep=False,
+    )
+
+    def train_step(params, opt_state, batch, step):
+        loss, metrics, grads = smapped(params, batch)
+        lr_scale = cosine_schedule(step, warmup, total_steps)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg,
+                                             lr_scale=lr_scale)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step

@@ -1,0 +1,32 @@
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 300) -> str:
+    """Run python code in a subprocess with N virtual host devices.
+
+    Tests in this process must see the real single device (per the dry-run
+    isolation rule), so multi-device behavior is exercised out-of-process.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"subprocess failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,98 @@
+"""Checkpointing: atomicity, integrity, retention, bf16, async, restore."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (8, 4)),
+        "nested": {"b": jnp.ones((3,), jnp.bfloat16),
+                   "c": jnp.arange(5, dtype=jnp.int32)},
+    }
+
+
+def test_roundtrip_with_bf16(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t, extra={"note": "x"})
+    got, step, extra = restore_checkpoint(str(tmp_path), t)
+    assert step == 7 and extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert latest_step(str(tmp_path)) == 4
+    kept = sorted(os.listdir(tmp_path))
+    assert kept == ["step_0000000003", "step_0000000004"]
+
+
+def test_integrity_detects_corruption(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    path = tmp_path / "step_0000000001" / "arrays.npz"
+    data = bytearray(path.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    path.write_bytes(bytes(data))
+    with pytest.raises(IOError, match="integrity"):
+        restore_checkpoint(str(tmp_path), _tree())
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    other = {"a": jnp.zeros((8, 4)), "nested": {"b": jnp.zeros((3,), jnp.bfloat16),
+                                                "WRONG": jnp.zeros((5,), jnp.int32)}}
+    with pytest.raises(ValueError, match="mismatch"):
+        restore_checkpoint(str(tmp_path), other)
+
+
+def test_crash_mid_save_never_corrupts_latest(tmp_path):
+    """A stale .tmp dir (simulated crash) is invisible to latest_step."""
+    save_checkpoint(str(tmp_path), 5, _tree())
+    os.makedirs(tmp_path / "step_0000000009.tmp")
+    (tmp_path / "step_0000000009.tmp" / "arrays.npz").write_bytes(b"garbage")
+    assert latest_step(str(tmp_path)) == 5
+    got, step, _ = restore_checkpoint(str(tmp_path), _tree())
+    assert step == 5
+
+
+def test_async_save_waits(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(1, _tree())
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_elastic_reshard_on_restore(tmp_path):
+    """Save on one topology, restore with different shardings (subprocess)."""
+    from conftest import run_multidevice
+    out = run_multidevice(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint import save_checkpoint, restore_checkpoint
+        t = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
+        mesh1 = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        t1 = jax.device_put(t, {{"w": NamedSharding(mesh1, P("data", None))}})
+        save_checkpoint(r"{tmp_path}", 3, t1)
+        # "new cluster": 4x2 mesh, different layout
+        mesh2 = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        sh2 = {{"w": NamedSharding(mesh2, P("model", "data"))}}
+        got, step, _ = restore_checkpoint(r"{tmp_path}", t, shardings=sh2)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(t["w"]))
+        assert got["w"].sharding.spec == P("model", "data")
+        print("ELASTIC_OK")
+    """)
+    assert "ELASTIC_OK" in out

@@ -1,0 +1,35 @@
+"""Discovery module: the homotopy-ALS search finds real ternary schemes."""
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core.discovery import discover
+from repro.core.lcma import validate
+
+
+def test_discover_strassen_rank7():
+    """<2,2,2>;7 is rediscovered from random inits within a few restarts."""
+    l = discover(2, 2, 2, 7, restarts=30, als_iters=80, seed=2)
+    assert l is not None, "failed to discover a rank-7 <2,2,2> scheme"
+    assert validate(l)
+    assert l.R == 7 and l.grid == (2, 2, 2)
+
+
+def test_discover_repairs_corrupted_scheme():
+    """Seeding with a corrupted Strassen converges back to a valid scheme —
+    the exact procedure that recovered our Laderman-family coefficients."""
+    import numpy as np
+    s = alg.strassen()
+    U = s.U.copy()
+    U[0, 0, 1] = 1  # corrupt two entries
+    U[3, 1, 0] = -1
+    from repro.core.lcma import LCMA
+    bad = LCMA("corrupt", 2, 2, 2, 7, U, s.V, s.W)
+    assert not validate(bad)
+    fixed = discover(2, 2, 2, 7, restarts=3, als_iters=60, init=bad, seed=0)
+    assert fixed is not None and validate(fixed)
+
+
+def test_discover_rejects_impossible_rank():
+    """Rank 6 for <2,2,2> does not exist (Strassen is optimal): must fail."""
+    l = discover(2, 2, 2, 6, restarts=3, als_iters=30, seed=0)
+    assert l is None

@@ -1,0 +1,77 @@
+"""falcon_matmul public API: dispatch, batching, AD, precombined weights."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core.falcon_gemm import (FalconConfig, falcon_dense, falcon_matmul,
+                                    matmul_with_precombined, plan,
+                                    precombine_weights)
+
+
+CFG_FORCE = FalconConfig(mode="strassen", backend="jnp")
+
+
+def test_batched_and_dense(rng):
+    A = jnp.asarray(rng.standard_normal((3, 20, 34)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((34, 18)), jnp.float32)
+    got = jax.jit(lambda a, b: falcon_matmul(a, b, CFG_FORCE))(A, B)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(A) @ np.asarray(B),
+                               rtol=2e-4, atol=2e-4)
+    got2 = falcon_dense(A, B, CFG_FORCE)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(got), atol=1e-5)
+
+
+def test_gradients_match_standard(rng):
+    A = jnp.asarray(rng.standard_normal((12, 10)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((10, 8)), jnp.float32)
+    f_lcma = lambda a, b: jnp.sum(jnp.sin(falcon_matmul(a, b, CFG_FORCE)))
+    f_std = lambda a, b: jnp.sum(jnp.sin(a @ b))
+    ga, gb = jax.grad(f_lcma, (0, 1))(A, B)
+    ga0, gb0 = jax.grad(f_std, (0, 1))(A, B)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ga0), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gb0), atol=1e-4)
+
+
+def test_auto_mode_small_fallback():
+    d = plan(128, 256, 256, FalconConfig())
+    assert not d.use_lcma  # memory-bound small shape => standard GEMM
+
+
+def test_auto_mode_large_selects_lcma():
+    d = plan(16384, 5376, 21504, FalconConfig())
+    assert d.use_lcma and d.speedup > 1.0
+
+
+def test_shards_scale_decision():
+    """Per-device shapes decide: a profitable global matmul sharded 16-ways
+    may stop being profitable (and vice versa)."""
+    big = plan(16384, 5376, 21504, FalconConfig())
+    sharded = plan(16384, 5376, 21504, FalconConfig(shards=(16, 1, 16)))
+    assert big.use_lcma
+    assert big.speedup != sharded.speedup
+
+
+def test_mode_gemm_disables():
+    d = plan(65536, 65536, 65536, FalconConfig(mode="gemm"))
+    assert not d.use_lcma
+
+
+def test_precombined_weights_roundtrip(rng):
+    l = alg.get("s223")
+    W = jnp.asarray(rng.standard_normal((30, 27)), jnp.float32)  # pads to 30x...
+    A = jnp.asarray(rng.standard_normal((2, 8, 30)), jnp.float32)
+    bt = precombine_weights(W, l)
+    got = matmul_with_precombined(A, bt, l, n_logical=27)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(A) @ np.asarray(W),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_backend_agrees(rng):
+    cfg = FalconConfig(mode="laderman", backend="pallas_interpret")
+    A = jnp.asarray(rng.standard_normal((27, 21)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((21, 33)), jnp.float32)
+    got = falcon_matmul(A, B, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(A) @ np.asarray(B),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,95 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algorithms as alg
+from repro.kernels import ops, ref
+from repro.kernels.fused_gemm import fused_gemm_combine_h, tiled_matmul
+from repro.kernels.group_combine import group_combine
+from repro.kernels.tuning import (combine_vmem, fused_gemm_vmem,
+                                  plan_combine_blocks, plan_fused_gemm_blocks)
+
+
+@pytest.mark.parametrize("name", ["strassen", "laderman", "s223"])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_group_combine_matches_oracle(name, dtype, rng):
+    l = alg.get(name)
+    X, Y = 32, 16
+    x = jnp.asarray(rng.standard_normal((l.m * X, l.k * Y)), dtype)
+    got = group_combine(x, l.U, block=(16, 8), interpret=True)
+    parts = x.reshape(l.m, X, l.k, Y).transpose(0, 2, 1, 3)
+    want = ref.group_combine_ref(parts, l.U)
+    # bf16: kernel adds sequentially in bf16; oracle einsum may accumulate
+    # differently => order-of-summation differences of a few ulp
+    atol, rtol = (1e-5, 1e-6) if dtype == "float32" else (6e-2, 2e-2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol, rtol=rtol)
+
+
+@pytest.mark.parametrize("name", ["strassen", "s223"])
+@pytest.mark.parametrize("blocks", [(16, 16, 16), (32, 8, 16), (8, 8, 8)])
+def test_fused_gemm_blocks(name, blocks, rng):
+    l = alg.get(name)
+    R = l.R
+    at = jnp.asarray(rng.standard_normal((R, 32, 32)), jnp.float32)
+    bt = jnp.asarray(rng.standard_normal((R, 32, 32)), jnp.float32)
+    got = fused_gemm_combine_h(at, bt, l.W, block=blocks, interpret=True)
+    want = ref.fused_gemm_combine_h_ref(at, bt, l.W)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(1, 5),
+       st.sampled_from(["strassen", "laderman"]))
+@settings(max_examples=10, deadline=None)
+def test_e2e_pallas_odd_shapes(mm, kk, nn, name):
+    """Padding path: arbitrary (possibly non-divisible) shapes stay correct."""
+    rng = np.random.default_rng(mm * 100 + kk * 10 + nn)
+    l = alg.get(name)
+    M, K, N = 13 * mm, 9 * kk, 11 * nn
+    A = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    got = ops.falcon_matmul_pallas(A, B, l, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(A) @ np.asarray(B),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_tiled_matmul_baseline(rng):
+    A = jnp.asarray(rng.standard_normal((48, 64)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    got = tiled_matmul(A, B, block=(16, 16, 16), interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(A) @ np.asarray(B),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_resource_planner_respects_budget():
+    """On-chip Resource Planning (§III-A): high-rank schemes get smaller tiles."""
+    bx, bz, by = plan_fused_gemm_blocks(4096, 4096, 4096, R=49, m=4, n=4,
+                                        dtype=jnp.bfloat16)
+    assert fused_gemm_vmem(bx, bz, by, 49, 4, 4, 2) <= (12 << 20)
+    bx7, bz7, by7 = plan_fused_gemm_blocks(4096, 4096, 4096, R=7, m=2, n=2,
+                                           dtype=jnp.bfloat16)
+    assert fused_gemm_vmem(bx7, bz7, by7, 7, 2, 2, 2) <= (12 << 20)
+    # lower rank => at least as large a working tile
+    assert bx7 * bz7 * by7 >= bx * bz * by
+
+
+def test_combine_planner():
+    bx, by = plan_combine_blocks(2048, 2048, R=23, nparts=9, dtype=jnp.bfloat16)
+    assert 2048 % bx == 0 and 2048 % by == 0
+    assert combine_vmem(bx, by, 23, 9, 2) <= (12 << 20)
+
+
+def test_fused_kernel_keeps_h_in_f32(rng):
+    """§IV-F mechanism: the fused kernel's C comes from f32 accumulators."""
+    l = alg.get("strassen")
+    at = jnp.asarray(rng.standard_normal((7, 16, 128)) * 30, jnp.bfloat16)
+    bt = jnp.asarray(rng.standard_normal((7, 128, 16)) * 30, jnp.bfloat16)
+    got = fused_gemm_combine_h(at, bt, l.W, block=(16, 16, 64),
+                               out_dtype=jnp.float32, interpret=True)
+    want = ref.fused_gemm_combine_h_ref(at, bt, l.W, out_dtype=jnp.float32)
+    # identical f32 accumulation up to summation order (values ~1e3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=0.5)

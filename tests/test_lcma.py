@@ -1,0 +1,81 @@
+"""LCMA scheme library: tensor-identity validation + closure operations."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algorithms as alg
+from repro.core.lcma import LCMA, apply_reference, validate
+
+
+def test_all_library_schemes_validate():
+    lib = alg.library()
+    assert len(lib) >= 20
+    for name, l in lib.items():
+        assert validate(l), name
+        assert l.R < l.m * l.k * l.n, f"{name} is not lower-complexity"
+
+
+def test_known_ranks():
+    lib = alg.library()
+    assert lib["strassen"].R == 7
+    assert lib["laderman"].R == 23          # Laderman-family <3,3,3>
+    assert lib["s223"].R == 11              # Hopcroft-Kerr rank
+    assert lib["s444"].R == 49              # two-level Strassen
+
+
+def test_strassen_nnz_matches_paper():
+    # paper §III-C: ||U||_0 = 12 for Strassen
+    s = alg.get("strassen")
+    assert s.nnz_u == 12 and s.nnz_v == 12 and s.nnz_w == 12
+
+
+@pytest.mark.parametrize("name", ["strassen", "strassen-winograd", "laderman",
+                                  "s223", "s232", "s322", "s444", "s555"])
+def test_apply_reference_exact(name, rng):
+    l = alg.get(name)
+    M, K, N = l.m * 4, l.k * 4, l.n * 4
+    A = rng.integers(-8, 8, (M, K)).astype(np.float64)
+    B = rng.integers(-8, 8, (K, N)).astype(np.float64)
+    # integer inputs => LCMA must be EXACT (coefficients are +-1)
+    np.testing.assert_array_equal(apply_reference(l, A, B), A @ B)
+
+
+def test_invalid_scheme_rejected():
+    s = alg.strassen()
+    bad_w = s.W.copy()
+    bad_w[0, 0, 0] = -bad_w[0, 0, 0] or 1
+    bad = LCMA("bad", 2, 2, 2, 7, s.U, s.V, bad_w)
+    assert not validate(bad)
+
+
+@given(st.sampled_from(["strassen", "s223", "laderman"]),
+       st.sampled_from(["strassen", "s322"]))
+@settings(max_examples=8, deadline=None)
+def test_tensor_product_closure(n1, n2):
+    l = alg.tensor_product(alg.get(n1), alg.get(n2))
+    assert validate(l)
+    l1, l2 = alg.get(n1), alg.get(n2)
+    assert l.R == l1.R * l2.R
+    assert l.grid == (l1.m * l2.m, l1.k * l2.k, l1.n * l2.n)
+
+
+@given(st.sampled_from(["strassen", "s223", "s232", "laderman"]))
+@settings(max_examples=8, deadline=None)
+def test_symmetry_closures(name):
+    l = alg.get(name)
+    assert validate(alg.transpose_dual(l))
+    assert validate(alg.cyclic(l))
+
+
+def test_concat_closures():
+    s = alg.strassen()
+    assert validate(alg.concat_n(s, alg.standard(2, 2, 3)))
+    assert validate(alg.concat_m(s, alg.standard(3, 2, 2)))
+    assert validate(alg.concat_k(s, alg.standard(2, 3, 2)))
+
+
+def test_candidates_sorted_by_saving():
+    cands = alg.candidates(max_grid=5)
+    savings = [c.mult_saving for c in cands]
+    assert savings == sorted(savings, reverse=True)
+    assert all(max(c.grid) <= 5 for c in cands)

@@ -1,0 +1,54 @@
+"""fsdp_only remap + parallel_block correctness (multi-device subprocess)."""
+import numpy as np
+
+from conftest import run_multidevice
+
+
+def test_fsdp_only_matches_tp_numerics():
+    """Same params, same batch: tp and fsdp_only styles must agree."""
+    out = run_multidevice("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.configs import registry
+        from repro.models import model as M
+        from repro.parallel import sharding as SH
+        cfg = dataclasses.replace(registry.smoke_config("granite_3_2b"), remat=False)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab_size)
+        batch = {"tokens": toks, "labels": toks}
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        losses = {}
+        for style in ("tp", "fsdp_only"):
+            c2 = dataclasses.replace(cfg, parallel_style=style)
+            tok = SH.set_parallel_style(style)
+            with jax.sharding.set_mesh(mesh):
+                rules = SH.make_rules(mesh, fsdp=True, style=style)
+                psh = SH.param_sharding(params, mesh, rules)
+                p2 = jax.device_put(params, psh)
+                loss, _ = jax.jit(lambda p, b: M.lm_loss(p, c2, b))(p2, batch)
+                losses[style] = float(loss)
+        assert abs(losses["tp"] - losses["fsdp_only"]) < 1e-4, losses
+        print("STYLES_OK", losses)
+    """)
+    assert "STYLES_OK" in out
+
+
+def test_parallel_block_changes_math_but_trains():
+    """parallel_block is a different (PaLM-style) architecture: outputs differ
+    from the sequential block but remain finite and trainable."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import registry
+    from repro.models import model as M
+    cfg = registry.smoke_config("granite_3_2b")
+    cfg_pb = dataclasses.replace(cfg, parallel_block=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    l0, _ = M.lm_loss(params, cfg, batch)
+    l1, _ = M.lm_loss(params, cfg_pb, batch)
+    assert np.isfinite(float(l1))
+    assert abs(float(l0) - float(l1)) > 1e-6  # genuinely different arch
+    g = jax.grad(lambda p: M.lm_loss(p, cfg_pb, batch)[0])(params)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))

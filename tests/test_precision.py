@@ -1,0 +1,50 @@
+"""Paper §IV-F: the fused pipeline (f32 H on-chip) beats downcast-H numerics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg, codegen
+
+
+def _rel_err(c, ref):
+    return float(np.linalg.norm(c - ref) / np.linalg.norm(ref))
+
+
+@pytest.mark.parametrize("name", ["strassen", "s444"])
+def test_fused_beats_downcast_h(name, rng):
+    """Fused keeps H in f32 and combines on-chip; the AlphaTensor-style
+    baseline downcasts H to bf16 before Combine H. Fused error must be lower
+    (statistically — averaged over trials, per the paper's ~17% claim)."""
+    l = alg.get(name)
+    M = K = N = l.m * 32
+    errs_f, errs_d = [], []
+    fused = codegen.generate(l, codegen.CodegenOptions(fused=True))
+    down = codegen.generate(l, codegen.CodegenOptions(
+        fused=False, downcast_h=True, gemm_backend="loop"))
+    for t in range(6):
+        r = np.random.default_rng(t)
+        A64 = r.standard_normal((M, K)) * 4
+        B64 = r.standard_normal((K, N)) * 4
+        ref = A64 @ B64
+        A = jnp.asarray(A64, jnp.bfloat16)
+        B = jnp.asarray(B64, jnp.bfloat16)
+        errs_f.append(_rel_err(np.asarray(fused.fn(A, B), np.float64), ref))
+        errs_d.append(_rel_err(np.asarray(down.fn(A, B), np.float64), ref))
+    assert np.mean(errs_f) < np.mean(errs_d), (errs_f, errs_d)
+
+
+def test_lcma_error_within_budget(rng):
+    """LCMA bf16 error stays within a small factor of standard bf16 GEMM."""
+    l = alg.get("laderman")
+    M = K = N = 96
+    A64 = rng.standard_normal((M, K))
+    B64 = rng.standard_normal((K, N))
+    ref = A64 @ B64
+    A = jnp.asarray(A64, jnp.bfloat16)
+    B = jnp.asarray(B64, jnp.bfloat16)
+    gemm_err = _rel_err(np.asarray(
+        jnp.dot(A, B, preferred_element_type=jnp.float32), np.float64), ref)
+    fused = codegen.generate(l)
+    lcma_err = _rel_err(np.asarray(fused.fn(A, B), np.float64), ref)
+    assert lcma_err < 6 * gemm_err  # literature: small constant-factor growth

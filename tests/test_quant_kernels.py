@@ -1,0 +1,72 @@
+"""Quantization-fused Combine A + int8 fused GEMM (paper §IV-C, int8/TPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.kernels import ref
+from repro.kernels.group_combine import group_combine
+from repro.kernels.quant_combine import (fused_gemm_combine_h_quant,
+                                         group_combine_quant,
+                                         quantize_b_blockwise)
+
+
+@pytest.mark.parametrize("name", ["strassen", "s223"])
+def test_quant_combine_roundtrip(name, rng):
+    """Dequantized Ã matches the f32 combine within int8 resolution."""
+    l = alg.get(name)
+    X, Y, by = 32, 64, 32
+    x = jnp.asarray(rng.standard_normal((l.m * X, l.k * Y)), jnp.float32)
+    q, s = group_combine_quant(x, l.U, block=(16, by), interpret=True)
+    assert q.dtype == jnp.int8 and q.shape == (l.R, X, Y)
+    assert s.shape == (l.R, X, Y // by)
+    deq = q.astype(jnp.float32) * jnp.repeat(s, by, axis=2)
+    want = group_combine(x, l.U, block=(16, 32), interpret=True)
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(want),
+                               atol=scale / 127 * 1.01)
+
+
+def test_int8_fused_lcma_matmul(rng):
+    """End-to-end int8 LCMA: quant-combined A x offline-quantized B ~= A@B."""
+    l = alg.get("strassen")
+    M = K = N = 128
+    by = 32
+    A = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    aq, as_ = group_combine_quant(A, l.U, block=(32, by), interpret=True)
+    bq, bs = quantize_b_blockwise(B, l.V, by=by, interpret=True)
+    cp = fused_gemm_combine_h_quant(aq, as_, bq, bs, l.W,
+                                    block=(32, 32, by), interpret=True)
+    C = cp.transpose(0, 2, 1, 3).reshape(M, N)
+    ref_c = np.asarray(A) @ np.asarray(B)
+    rel = np.linalg.norm(np.asarray(C) - ref_c) / np.linalg.norm(ref_c)
+    assert rel < 0.02, rel  # int8 block-scaled: ~1% relative error expected
+
+
+def test_int8_error_comparable_to_plain_int8_gemm(rng):
+    """LCMA int8 error stays within ~2x of a plain blockwise-int8 GEMM."""
+    l = alg.get("strassen")
+    M = K = N = 128
+    by = 32
+    A = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    ref_c = np.asarray(A) @ np.asarray(B)
+
+    # plain blockwise int8 (no LCMA): quantize directly
+    def q8(x, axis_block):
+        xb = x.reshape(x.shape[0], x.shape[1] // axis_block, axis_block)
+        s = np.maximum(np.abs(xb).max(axis=2) / 127.0, 1e-12)
+        q = np.clip(np.round(xb / s[..., None]), -127, 127)
+        return (q * s[..., None]).reshape(x.shape)
+
+    plain = q8(np.asarray(A), by) @ np.asarray(B)
+    e_plain = np.linalg.norm(plain - ref_c) / np.linalg.norm(ref_c)
+
+    aq, as_ = group_combine_quant(A, l.U, block=(32, by), interpret=True)
+    bq, bs = quantize_b_blockwise(B, l.V, by=by, interpret=True)
+    cp = fused_gemm_combine_h_quant(aq, as_, bq, bs, l.W,
+                                    block=(32, 32, by), interpret=True)
+    C = np.asarray(cp.transpose(0, 2, 1, 3).reshape(M, N))
+    e_lcma = np.linalg.norm(C - ref_c) / np.linalg.norm(ref_c)
+    assert e_lcma < 4 * e_plain + 1e-4, (e_lcma, e_plain)

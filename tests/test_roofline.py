@@ -1,0 +1,80 @@
+"""Roofline: HLO collective parser + analytic cost model sanity."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SHAPE_CELLS
+from repro.core.hardware import TPU_V5E
+from repro.roofline.analysis import collective_bytes
+from repro.roofline.analytic import analytic_costs
+
+
+HLO = """
+HloModule test
+%fused (x: bf16[1024,512]) -> bf16[1024,512] {
+  %ag = bf16[2048,512]{1,0} all-gather(bf16[1024,512]{1,0} %x), replica_groups={}
+  %ar.1 = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %y), to_apply=%sum
+  %rs = f32[64,256]{1,0} reduce-scatter(f32[128,256]{1,0} %z), dimensions={0}
+  %cp = bf16[32]{0} collective-permute(bf16[32]{0} %w), source_target_pairs={{0,1}}
+  %a2a = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(f32[16,16] %p, f32[16,16] %q)
+  %donttouch = f32[999,999]{1,0} add(f32[999,999] %a, f32[999,999] %b)
+}
+"""
+
+
+def test_collective_parser():
+    got = collective_bytes(HLO)
+    assert got["all-gather"] == 2048 * 512 * 2 * 1.0
+    assert got["all-reduce"] == 128 * 256 * 4 * 2.0          # 2x ring traffic
+    assert got["reduce-scatter"] == 64 * 256 * 4
+    assert got["collective-permute"] == 32 * 2
+    assert got["all-to-all"] == 2 * 16 * 16 * 4
+    counts = got["_counts"]
+    assert counts["all-reduce"] == 1 and counts["all-gather"] == 1
+
+
+def test_parser_skips_async_done_pairs():
+    txt = """
+  %s = bf16[64,64]{1,0} all-gather-start(bf16[32,64] %x)
+  %d = bf16[64,64]{1,0} all-gather-done(bf16[64,64] %s)
+"""
+    got = collective_bytes(txt)
+    assert got["all-gather"] == 64 * 64 * 2  # start counted once, done skipped
+
+
+def _costs(arch, shape, mesh=None):
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[shape]
+    mesh = mesh or {"data": 16, "model": 16}
+    # rough param counts; exact counts come from specs in the dry-run
+    n = {"granite_3_2b": 2.5e9, "gemma3_27b": 27e9, "kimi_k2_1t": 1.04e12,
+         "mamba2_370m": 4e8}[arch]
+    return analytic_costs(cfg, cell, mesh, int(n), int(n))
+
+
+def test_train_flops_close_to_6nd():
+    c = _costs("granite_3_2b", "train_4k")
+    model = 6 * 2.5e9 * 256 * 4096 / 256  # per device
+    # remat adds 1/3, attention adds ~10-20%
+    assert model < c.flops < 2.2 * model
+
+
+def test_decode_flops_tiny_vs_prefill():
+    dec = _costs("granite_3_2b", "decode_32k")
+    pre = _costs("granite_3_2b", "prefill_32k")
+    assert dec.flops < pre.flops / 100
+
+
+def test_multi_pod_scales_flops_down():
+    c1 = _costs("gemma3_27b", "train_4k", {"data": 16, "model": 16})
+    c2 = _costs("gemma3_27b", "train_4k", {"pod": 2, "data": 16, "model": 16})
+    np.testing.assert_allclose(c1.flops / 2, c2.flops, rtol=0.01)
+
+
+def test_terms_positive_and_finite():
+    for arch in ("granite_3_2b", "kimi_k2_1t", "mamba2_370m"):
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            c = _costs(arch, shape)
+            t = c.terms(TPU_V5E)
+            assert all(np.isfinite(x) and x >= 0 for x in t), (arch, shape, t)
+            assert c.flops > 0 and c.hbm_bytes > 0
