@@ -6,17 +6,9 @@ import time
 import jax
 import numpy as np
 
-# Linear-layer (N, K) shapes extracted from the paper's three LLM workloads
-# (§IV-B): DeepSeek-R1-, Qwen3.5- and HunyuanVideo-style projections.
-LLM_SHAPES = {
-    "deepseek_r1": [(7168, 18432), (18432, 7168), (7168, 2048), (2048, 7168),
-                    (7168, 4096), (4096, 7168), (1536, 7168), (7168, 1536),
-                    (7168, 9216), (9216, 7168), (7168, 7168)],
-    "qwen3_5": [(5120, 25600), (25600, 5120), (5120, 5120), (5120, 640),
-                (640, 5120), (5120, 13824), (13824, 5120)],
-    "hunyuan_video": [(3072, 12288), (12288, 3072), (3072, 3072),
-                      (3072, 9216), (9216, 3072), (3072, 6144)],
-}
+# Paper §IV-B LLM projection shapes — shared with the tune CLI's cache
+# warming so benchmark and deploy-time shape grids cannot drift.
+from repro.core.workloads import LLM_SHAPES  # noqa: F401
 
 
 def time_fn(fn, *args, warmup: int = 2, reps: int = 5) -> float:

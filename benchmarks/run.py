@@ -15,7 +15,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
 
-    from . import e2e_llm, operator_level, precision, roofline_fig8, stepwise
+    from . import (e2e_llm, operator_level, plan_cache, precision,
+                   roofline_fig8, stepwise)
 
     t0 = time.time()
     print("=" * 72)
@@ -38,6 +39,11 @@ def main() -> None:
     print("Fig.8 roofline + Decision Module selection (v5e model)")
     print("=" * 72)
     roofline_fig8.run()
+
+    print("\n" + "=" * 72)
+    print("Plan cache amortization + autotuned decision quality")
+    print("=" * 72)
+    plan_cache.run(sizes=(512, 1024) if args.quick else (512, 1024, 2048))
 
     print("\n" + "=" * 72)
     print("IV-F numerical precision: fused vs downcast-H")

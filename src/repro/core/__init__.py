@@ -1,5 +1,7 @@
-from . import algorithms, codegen, decision, discovery, hardware, lcma
+from . import (algorithms, autotune, codegen, decision, discovery, hardware,
+               lcma, plan_cache)
 from .falcon_gemm import FalconConfig, falcon_dense, falcon_matmul
 
-__all__ = ["algorithms", "codegen", "decision", "discovery", "hardware", "lcma",
+__all__ = ["algorithms", "autotune", "codegen", "decision", "discovery",
+           "hardware", "lcma", "plan_cache",
            "FalconConfig", "falcon_dense", "falcon_matmul"]

@@ -1,0 +1,251 @@
+"""Empirical autotuning: calibrate the Decision Module against measured reality.
+
+The paper's Decision Module (§III-C) prices candidates with an *analytical*
+roofline ``(FLOPS_x, FLOPS_+, beta)`` model. Real machines miss those peaks by
+workload-dependent factors (XLA-CPU reaches ~35% of stream bandwidth through a
+combine's slice+add+stack pattern; batched small GEMMs run below one big GEMM).
+This module measures the factors the model actually uses, on a small grid of
+probe shapes, and emits a calibrated :class:`HardwareProfile` that
+``decision.decide`` consumes in place of the static tables in ``hardware.py``:
+
+  * ``flops_mul``  — effective matmul throughput, from timing the backend's
+    GEMM (``jnp.dot``, or the Pallas ``matmul_pallas`` kernel);
+  * ``beta``       — effective HBM/memory bandwidth, from timing a real Group
+    Combine A (the memory-bound LCMA stage), not a synthetic stream;
+  * ``flops_add``  — elementwise throughput at that effective bandwidth;
+  * ``lcma_gemm_efficiency`` — the R-batched LCMA GEMM stage relative to one
+    big GEMM (through ``dot_general`` or the fused Pallas kernel).
+
+Each probe is timed best-of-``reps`` after warmup; fits take the median across
+probe shapes so one noisy probe cannot skew the profile. The measurement
+clock is injectable (``timer=``) so tests can calibrate deterministically.
+
+``python -m repro.tools.tune`` is the CLI wrapper that writes the profile JSON
+(plus per-scheme Pallas block plans from ``kernels.tuning``) and warms the
+persistent plan cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, Sequence
+
+from . import algorithms, codegen
+from . import decision as dec
+from .hardware import HardwareProfile, get_profile, register_profile, save_profile
+from .lcma import LCMA
+
+__all__ = ["ProbeMeasurement", "CalibrationReport", "autotune", "calibrate",
+           "default_probe_shapes", "best_of_timer"]
+
+# Probe grids per backend: big enough to exercise the pipelines, small enough
+# to finish in seconds. Interpret-mode Pallas executes Python per grid step,
+# so its probes stay tiny.
+_PROBE_SHAPES = {
+    "jnp": [(256, 256, 256), (256, 512, 384), (512, 512, 512)],
+    "pallas": [(256, 256, 256), (256, 512, 384), (512, 512, 512)],
+    "pallas_interpret": [(32, 32, 32), (64, 32, 64)],
+}
+
+
+def default_probe_shapes(backend: str) -> list[tuple[int, int, int]]:
+    return list(_PROBE_SHAPES.get(backend, _PROBE_SHAPES["jnp"]))
+
+
+def best_of_timer(reps: int = 3, warmup: int = 1) -> Callable:
+    """Wall-clock best-of timer for jitted JAX callables (the default)."""
+    import jax
+
+    def timer(fn, *args) -> float:
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    return timer
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeMeasurement:
+    """One (M, K, N) probe: raw seconds + the per-probe derived quantities."""
+    M: int
+    K: int
+    N: int
+    dtype: str
+    t_gemm: float                # backend GEMM on the full problem
+    t_combine_a: float           # Group Combine A of the probe scheme
+    t_batched: float             # R-batched LCMA GEMM stage
+    t_pipeline: float | None     # full LCMA pipeline (validation; may be skipped)
+    flops_mul_est: float
+    beta_est: float
+    eff_est: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class CalibrationReport:
+    base: str
+    backend: str
+    dtype: str
+    scheme: str
+    probes: list[ProbeMeasurement]
+    profile: HardwareProfile
+    # per-probe relative error of the calibrated model's predicted LCMA
+    # pipeline time vs the measured pipeline (empty when validation skipped)
+    model_rel_err: list[float]
+
+    @property
+    def max_rel_err(self) -> float | None:
+        return max(self.model_rel_err) if self.model_rel_err else None
+
+    def metadata(self) -> dict:
+        return {
+            "base": self.base, "backend": self.backend, "dtype": self.dtype,
+            "scheme": self.scheme,
+            "probes": [p.as_dict() for p in self.probes],
+            "model_rel_err": self.model_rel_err,
+        }
+
+
+def _combine_bytes(l: LCMA, Mp: int, Kp: int, itemsize: int) -> int:
+    # Combine A moves M*K reads + R*(M/m)*(K/k) writes (Table II).
+    return (Mp * Kp + l.R * (Mp // l.m) * (Kp // l.k)) * itemsize
+
+
+def _measure_probe(M: int, K: int, N: int, l: LCMA, backend: str, dtype: str,
+                   timer: Callable, validate: bool) -> ProbeMeasurement:
+    import jax
+    import jax.numpy as jnp
+
+    jdt = jnp.dtype(dtype)
+    itemsize = jdt.itemsize
+    a = jnp.ones((M, K), jdt)
+    b = jnp.ones((K, N), jdt)
+
+    def pad(x, d0, d1):
+        return jnp.pad(x, ((0, (-x.shape[0]) % d0), (0, (-x.shape[1]) % d1)))
+
+    ap = pad(a, l.m, l.k)
+    bp = pad(b, l.k, l.n)
+    Mp, Kp = ap.shape
+    Np = bp.shape[1]
+    X, Ks, Z = Mp // l.m, Kp // l.k, Np // l.n
+    interpret = backend == "pallas_interpret"
+
+    if backend in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops
+        from repro.kernels.group_combine import group_combine
+        from repro.kernels.fused_gemm import fused_gemm_combine_h
+
+        # jit every timed callable: the GEMM wrapper is already @jax.jit'd,
+        # and timing the combines eagerly would charge them per-call trace
+        # overhead the GEMM doesn't pay, biasing beta/efficiency low.
+        comb = jax.jit(lambda x: group_combine(x, l.U, interpret=interpret))
+        bat = jax.jit(lambda x, y: fused_gemm_combine_h(
+            x, y, l.W, out_dtype=jdt, interpret=interpret))
+        t_gemm = timer(lambda x, y: ops.matmul_pallas(x, y, interpret=interpret), a, b)
+        t_comb = timer(comb, ap)
+        at = group_combine(ap, l.U, interpret=interpret)
+        bt = group_combine(bp, l.V, interpret=interpret)
+        t_bat = timer(bat, at, bt)
+        t_pipe = (timer(lambda x, y: ops.falcon_matmul_pallas(
+            x, y, l, interpret=interpret), a, b) if validate else None)
+    else:
+        gen = codegen.generate(l)
+        mm = jax.jit(lambda x, y: jnp.dot(x, y))
+        comb = jax.jit(gen.combine_a)
+        bmm = jax.jit(lambda x, y: jax.lax.dot_general(
+            x, y, (((2,), (1,)), ((0,), (0,)))))
+        full = jax.jit(gen.fn)
+        t_gemm = timer(mm, a, b)
+        t_comb = timer(comb, ap)
+        at = jnp.ones((l.R, X, Ks), jdt)
+        bt = jnp.ones((l.R, Ks, Z), jdt)
+        t_bat = timer(bmm, at, bt)
+        t_pipe = timer(full, ap, bp) if validate else None
+
+    flops_mul = 2.0 * M * N * K / t_gemm
+    beta = _combine_bytes(l, Mp, Kp, itemsize) / t_comb
+    batched_flops = 2.0 * l.R * X * Ks * Z / t_bat
+    eff = min(batched_flops / flops_mul, 1.0)
+    return ProbeMeasurement(M, K, N, dtype, t_gemm, t_comb, t_bat, t_pipe,
+                            flops_mul, beta, eff)
+
+
+def autotune(base: str | HardwareProfile = "cpu_host", backend: str = "jnp",
+             shapes: Sequence[tuple[int, int, int]] | None = None,
+             dtype: str = "float32", scheme: str = "strassen",
+             reps: int = 3, warmup: int = 1,
+             timer: Callable | None = None, name: str | None = None,
+             validate: bool = True) -> CalibrationReport:
+    """Measure the backend on probe shapes and fit a calibrated profile.
+
+    Returns a :class:`CalibrationReport`; ``report.profile`` is registered
+    with ``hardware`` so ``FalconConfig(hardware=report.profile.name)`` and
+    ``decide(..., hw=report.profile.name)`` resolve it immediately.
+    """
+    base_prof = get_profile(base) if isinstance(base, str) else base
+    if backend not in ("jnp", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown autotune backend {backend!r}")
+    shapes = list(shapes) if shapes is not None else default_probe_shapes(backend)
+    timer = timer or best_of_timer(reps=reps, warmup=warmup)
+    l = algorithms.get(scheme)
+
+    probes = [_measure_probe(M, K, N, l, backend, dtype, timer, validate)
+              for (M, K, N) in shapes]
+
+    flops_mul = statistics.median(p.flops_mul_est for p in probes)
+    beta = statistics.median(p.beta_est for p in probes)
+    eff = statistics.median(p.eff_est for p in probes)
+    flops_add = beta / dec._dtype_bytes(dtype)  # 1 add/elem at effective BW
+
+    prof = dataclasses.replace(
+        base_prof,
+        name=name or f"{base_prof.name}_autotuned",
+        flops_mul=flops_mul,
+        flops_add=flops_add,
+        beta=beta,
+        lcma_gemm_efficiency=eff,
+        dtype_flops=None,         # calibration is per measured dtype
+    )
+    register_profile(prof)
+
+    rel_err = []
+    for p in probes:
+        if p.t_pipeline is None:
+            continue
+        pred = dec.lcma_time(l, p.M, p.N, p.K, prof, dtype=dtype)
+        rel_err.append(abs(pred - p.t_pipeline) / p.t_pipeline)
+
+    return CalibrationReport(base=base_prof.name, backend=backend, dtype=dtype,
+                             scheme=scheme, probes=probes, profile=prof,
+                             model_rel_err=rel_err)
+
+
+def calibrate(path: str | None = None, block_plan_shapes: bool = True,
+              **kw) -> tuple[CalibrationReport, str]:
+    """``autotune`` + persist the profile JSON (the one-call convenience).
+
+    The saved metadata embeds the probe measurements and, when requested, the
+    per-candidate Pallas block plans from ``kernels.tuning`` for a
+    representative serving shape — so a deploy host can inspect exactly what
+    the tuner saw.
+    """
+    report = autotune(**kw)
+    meta = report.metadata()
+    if block_plan_shapes:
+        from repro.kernels import tuning
+        M, K, N = 4096, 4096, 4096
+        meta["block_plans"] = {
+            l.name: tuning.block_plans(l, M, K, N, dtype=report.dtype)
+            for l in algorithms.candidates(max_grid=3)
+        }
+    out = save_profile(report.profile, path, metadata=meta)
+    return report, out

@@ -25,7 +25,6 @@ same coefficients into on-chip kernels (see ``repro.kernels``).
 from __future__ import annotations
 
 import dataclasses
-import textwrap
 from functools import lru_cache
 from typing import Callable
 

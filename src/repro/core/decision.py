@@ -25,10 +25,9 @@ boundary waste is priced into the decision.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 from . import algorithms
-from .hardware import HardwareProfile
+from .hardware import HardwareProfile, get_profile
 from .lcma import LCMA
 
 __all__ = ["StageCost", "LCMAEstimate", "Decision", "gemm_time", "lcma_time",
@@ -102,26 +101,37 @@ def _pad_up(x: int, d: int) -> int:
     return ((x + d - 1) // d) * d
 
 
-def gemm_time(M: int, N: int, K: int, hw: HardwareProfile, dtype: str = "bfloat16") -> float:
+def _resolve_hw(hw: HardwareProfile | str) -> HardwareProfile:
+    """Accept a profile by name so calibrated (autotuned) profiles written to
+    disk by ``repro.tools.tune`` are consumed transparently."""
+    return get_profile(hw) if isinstance(hw, str) else hw
+
+
+def gemm_time(M: int, N: int, K: int, hw: HardwareProfile | str,
+              dtype: str = "bfloat16") -> float:
     """Standard GEMM roofline time (Eq. 8 dichotomy)."""
+    hw = _resolve_hw(hw)
     by = _dtype_bytes(dtype)
     flops = 2.0 * M * N * K
     mem = (M * K + K * N + M * N) * by
     return max(flops / hw.flops_for(dtype), mem / hw.beta)
 
 
-def eq8_is_memory_bound(M: int, N: int, K: int, hw: HardwareProfile, dtype: str = "bfloat16") -> bool:
+def eq8_is_memory_bound(M: int, N: int, K: int, hw: HardwareProfile | str,
+                        dtype: str = "bfloat16") -> bool:
     """Paper Eq. 8: when standard GEMM is memory-bound, no LCMA can win."""
+    hw = _resolve_hw(hw)
     by = _dtype_bytes(dtype)
     ai = 2.0 * M * N * K / ((M * K + K * N + M * N) * by)
     return ai <= hw.flops_for(dtype) / hw.beta
 
 
-def estimate(l: LCMA, M: int, N: int, K: int, hw: HardwareProfile,
+def estimate(l: LCMA, M: int, N: int, K: int, hw: HardwareProfile | str,
              dtype: str = "bfloat16", fused: bool = True,
              precombined_b: bool = False,
              pad_multiple: tuple[int, int, int] = (1, 1, 1)) -> LCMAEstimate:
     """Per-stage cost of one LCMA application (Table II + fused correction)."""
+    hw = _resolve_hw(hw)
     by = _dtype_bytes(dtype)
     m, k, n, R = l.m, l.k, l.n, l.R
     # LCMA pays for padding to grid (and optionally kernel-tile) multiples.
@@ -155,9 +165,10 @@ def lcma_time(l: LCMA, M: int, N: int, K: int, hw: HardwareProfile, **kw) -> flo
     return estimate(l, M, N, K, hw, **kw).time
 
 
-def eq10_profitable(l: LCMA, M: int, N: int, K: int, hw: HardwareProfile,
+def eq10_profitable(l: LCMA, M: int, N: int, K: int, hw: HardwareProfile | str,
                     dtype: str = "bfloat16") -> bool:
     """Paper Eq. 10 closed form (fused; combine stages memory-bound regime)."""
+    hw = _resolve_hw(hw)
     by = _dtype_bytes(dtype)
     m, k, n, R = l.m, l.k, l.n, l.R
     num = 2.0 * M * N * K * (1.0 - R / (m * n * k))
@@ -165,12 +176,18 @@ def eq10_profitable(l: LCMA, M: int, N: int, K: int, hw: HardwareProfile,
     return num / den > hw.flops_for(dtype) / hw.beta
 
 
-def decide(M: int, N: int, K: int, hw: HardwareProfile, dtype: str = "bfloat16",
+def decide(M: int, N: int, K: int, hw: HardwareProfile | str, dtype: str = "bfloat16",
            candidates: list[LCMA] | None = None, fused: bool = True,
            precombined_b: bool = False,
            pad_multiple: tuple[int, int, int] = (1, 1, 1),
            min_speedup: float = 1.0) -> Decision:
-    """Select the best LCMA for (M, N, K) or fall back to standard GEMM."""
+    """Select the best LCMA for (M, N, K) or fall back to standard GEMM.
+
+    ``hw`` may be a ``HardwareProfile`` or a profile *name*; names resolve
+    through ``hardware.get_profile``, which also finds calibrated profiles
+    written to disk by the autotuner (``python -m repro.tools.tune``).
+    """
+    hw = _resolve_hw(hw)
     t_gemm = gemm_time(M, N, K, hw, dtype)
     if candidates is None:
         candidates = algorithms.candidates()

@@ -17,13 +17,12 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import algorithms, codegen, decision as dec
+from . import algorithms, codegen, decision as dec, plan_cache
 from .hardware import HardwareProfile, get_profile
 from .lcma import LCMA
 
@@ -47,6 +46,9 @@ class FalconConfig:
     max_grid: int = 5
     # Per-device scaling of (M, K, N) under pjit: number of shards per dim.
     shards: tuple[int, int, int] = (1, 1, 1)
+    # Memoize auto-mode Decisions in the process plan cache (serving hot path
+    # re-traces the same shapes; see core/plan_cache.py).
+    use_plan_cache: bool = True
 
     @property
     def profile(self) -> HardwareProfile:
@@ -60,7 +62,12 @@ class FalconConfig:
 
 def plan(M: int, K: int, N: int, cfg: FalconConfig, dtype: str = "bfloat16",
          precombined_b: bool = False) -> dec.Decision:
-    """Run the Decision Module for a (possibly sharded) matmul shape."""
+    """Run the Decision Module for a (possibly sharded) matmul shape.
+
+    Auto-mode decisions are memoized in the process plan cache (keyed on the
+    local shape, dtype, hardware fingerprint and dispatch policy), so repeated
+    trace-time shapes — the serving hot path — skip candidate enumeration.
+    """
     sm, sk, sn = cfg.shards
     Ml, Kl, Nl = max(M // sm, 1), max(K // sk, 1), max(N // sn, 1)
     if cfg.mode == "gemm" or not cfg.enabled:
@@ -73,9 +80,23 @@ def plan(M: int, K: int, N: int, cfg: FalconConfig, dtype: str = "bfloat16",
         return dec.Decision(Ml, Nl, Kl, dtype, l,
                             dec.gemm_time(Ml, Nl, Kl, cfg.profile, dtype),
                             est.time, (est,))
-    return dec.decide(Ml, Nl, Kl, cfg.profile, dtype,
-                      candidates=cfg.candidate_schemes(), fused=cfg.fused,
-                      precombined_b=precombined_b, min_speedup=cfg.min_speedup)
+    cache = key = None
+    if cfg.use_plan_cache:
+        cache = plan_cache.default_cache()
+        key = plan_cache.plan_key(
+            Ml, Kl, Nl, cfg.profile, dtype, fused=cfg.fused,
+            precombined_b=precombined_b, mode=cfg.mode,
+            candidates=cfg.candidates, max_grid=cfg.max_grid,
+            min_speedup=cfg.min_speedup)
+        hit = cache.lookup(key)
+        if hit is not None:
+            return hit
+    d = dec.decide(Ml, Nl, Kl, cfg.profile, dtype,
+                   candidates=cfg.candidate_schemes(), fused=cfg.fused,
+                   precombined_b=precombined_b, min_speedup=cfg.min_speedup)
+    if cache is not None:
+        cache.insert(key, d)
+    return d
 
 
 def _pad2(x: jnp.ndarray, d0: int, d1: int) -> jnp.ndarray:

@@ -11,10 +11,13 @@ multi-pod roofline and the Pallas resource planner.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 
 __all__ = ["HardwareProfile", "TPU_V5E", "TPU_V5E_POD", "CPU_HOST", "get_profile",
-           "calibrate_cpu"]
+           "calibrate_cpu", "register_profile", "profile_dir", "profile_path",
+           "save_profile", "load_profile", "ENV_PROFILE_DIR"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +44,14 @@ class HardwareProfile:
     def ridge_intensity(self) -> float:
         """FLOPS_x / beta — the roofline ridge point (FLOP per byte)."""
         return self.flops_mul / self.beta
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "HardwareProfile":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
 
 
 # TPU v5e: 197 TFLOP/s bf16 MXU, 819 GB/s HBM, ~50 GB/s/link ICI (per prompt).
@@ -78,9 +89,61 @@ CPU_HOST = HardwareProfile(
 
 _PROFILES = {p.name: p for p in (TPU_V5E, TPU_V5E_POD, CPU_HOST)}
 
+# Calibrated profiles written by ``repro.tools.tune`` live here; set the env
+# var to relocate (CI, multi-host). Looked up lazily by ``get_profile``.
+ENV_PROFILE_DIR = "FALCON_PROFILE_DIR"
+
+
+def profile_dir() -> str:
+    return os.environ.get(ENV_PROFILE_DIR) or os.path.join(
+        os.path.expanduser("~"), ".cache", "falcon_gemm", "profiles")
+
+
+def profile_path(name: str) -> str:
+    return os.path.join(profile_dir(), f"{name}.json")
+
+
+def register_profile(p: HardwareProfile) -> HardwareProfile:
+    """Make a profile resolvable by name (``FalconConfig.hardware``)."""
+    _PROFILES[p.name] = p
+    return p
+
+
+def save_profile(p: HardwareProfile, path: str | None = None,
+                 metadata: dict | None = None) -> str:
+    """Write a profile (plus optional calibration metadata) as JSON."""
+    path = path or profile_path(p.name)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    doc = p.to_dict()
+    if metadata:
+        doc["_metadata"] = metadata
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+    os.replace(tmp, path)
+    return path
+
+
+def load_profile(path: str, register: bool = True) -> HardwareProfile:
+    with open(path) as f:
+        doc = json.load(f)
+    p = HardwareProfile.from_dict(doc)
+    if register:
+        register_profile(p)
+    return p
+
 
 def get_profile(name: str) -> HardwareProfile:
-    return _PROFILES[name]
+    """Resolve a profile by name: built-ins/registered first, then the
+    on-disk calibrated-profile directory (autotune output)."""
+    p = _PROFILES.get(name)
+    if p is not None:
+        return p
+    path = profile_path(name)
+    if os.path.exists(path):
+        return load_profile(path)
+    raise KeyError(f"unknown hardware profile {name!r} "
+                   f"(no built-in and no {path})")
 
 
 _CPU_CAL_CACHE: dict = {}

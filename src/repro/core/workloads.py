@@ -1,0 +1,31 @@
+"""Serving workload shape tables shared by benchmarks and the tune CLI.
+
+Linear-layer (N, K) projection shapes extracted from the paper's three LLM
+workloads (§IV-B): DeepSeek-R1-, Qwen3.5- and HunyuanVideo-style projections.
+Kept under ``src/`` (not ``benchmarks/``) so installed entry points —
+``repro.tools.tune`` cache warming — and the benchmark suite price the same
+shapes and cannot drift apart.
+"""
+from __future__ import annotations
+
+LLM_SHAPES = {
+    "deepseek_r1": [(7168, 18432), (18432, 7168), (7168, 2048), (2048, 7168),
+                    (7168, 4096), (4096, 7168), (1536, 7168), (7168, 1536),
+                    (7168, 9216), (9216, 7168), (7168, 7168)],
+    "qwen3_5": [(5120, 25600), (25600, 5120), (5120, 5120), (5120, 640),
+                (640, 5120), (5120, 13824), (13824, 5120)],
+    "hunyuan_video": [(3072, 12288), (12288, 3072), (3072, 3072),
+                      (3072, 9216), (9216, 3072), (3072, 6144)],
+}
+
+# Tokens-per-trace (batch x seq) grid and square operator sizes used to
+# pre-warm the plan cache for serving.
+WARM_TOKENS = [128, 512, 2048, 8192]
+WARM_SQUARE = [512, 1024, 2048, 4096, 8192, 16384]
+
+
+def warm_shapes(workload: str = "deepseek_r1") -> list[tuple[int, int, int]]:
+    """(M, K, N) grid the tune CLI warms the plan cache with."""
+    out = [(m, k, n) for m in WARM_TOKENS for k, n in LLM_SHAPES[workload]]
+    out += [(s, s, s) for s in WARM_SQUARE]
+    return out

@@ -10,7 +10,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.lcma import LCMA
 from .fused_gemm import fused_gemm_combine_h, tiled_matmul

@@ -46,6 +46,34 @@ def plan_combine_blocks(X: int, Y: int, R: int, nparts: int, dtype,
     return best
 
 
+def block_plans(l, M: int, K: int, N: int, dtype="float32",
+                budget: int = VMEM_BUDGET) -> dict:
+    """Full block-plan summary for one LCMA application on a padded problem.
+
+    The export surface for the autotuner (``core.autotune``) and the tune CLI:
+    everything the Pallas pipeline would pick for this shape, as plain data
+    that can be embedded in a calibrated-profile JSON and inspected offline.
+    """
+    it = jnp.dtype(dtype).itemsize
+    Mp = ((M + l.m - 1) // l.m) * l.m
+    Kp = ((K + l.k - 1) // l.k) * l.k
+    Np = ((N + l.n - 1) // l.n) * l.n
+    X, Ks, Z = Mp // l.m, Kp // l.k, Np // l.n
+    ca = plan_combine_blocks(X, Ks, l.R, l.m * l.k, dtype, budget)
+    cb = plan_combine_blocks(Ks, Z, l.R, l.k * l.n, dtype, budget)
+    fg = plan_fused_gemm_blocks(X, Z, Ks, l.R, l.m, l.n, dtype, budget)
+    return {
+        "grid": [l.m, l.k, l.n], "R": l.R,
+        "padded_shape": [Mp, Kp, Np],
+        "combine_a": list(ca), "combine_b": list(cb),
+        "fused_gemm": list(fg),
+        "combine_a_vmem_bytes": combine_vmem(*ca, l.R, l.m * l.k, it),
+        "combine_b_vmem_bytes": combine_vmem(*cb, l.R, l.k * l.n, it),
+        "fused_gemm_vmem_bytes": fused_gemm_vmem(*fg, l.R, l.m, l.n, it),
+        "vmem_budget_bytes": budget,
+    }
+
+
 def fused_gemm_vmem(bx: int, bz: int, by: int, R: int, m: int, n: int,
                     itemsize: int, acc_itemsize: int = 4) -> int:
     io = 2 * R * (bx * by + by * bz) * itemsize   # double-buffered At/Bt blocks

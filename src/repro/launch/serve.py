@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
+from repro.core import plan_cache
 from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
 from repro.train.steps import make_decode_step, make_prefill_step
@@ -29,7 +30,15 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-cache", default=None, metavar="PATH",
+                    help="persistent Decision plan cache (JSON, written by "
+                         "repro.tools.tune); loaded before tracing and "
+                         "flushed back on exit")
     args = ap.parse_args()
+
+    if args.plan_cache:
+        cache = plan_cache.configure(path=args.plan_cache)
+        print(f"plan cache: {len(cache)} plans loaded from {args.plan_cache}")
 
     cfg = smoke_config(args.arch) if args.reduced else get_config(args.arch)
     mesh = make_local_mesh()
@@ -77,6 +86,11 @@ def main() -> None:
     print(f"decode:  {t_decode/args.gen*1e3:.2f} ms/token "
           f"({args.batch * args.gen / t_decode:.1f} tok/s)")
     print("sample:", np.stack(out_tokens, 1)[0].reshape(-1)[:16].tolist())
+    st = plan_cache.stats()
+    print(f"plan cache: {st.hits} hits / {st.misses} misses "
+          f"({st.hit_rate:.0%} hit rate, {len(plan_cache.default_cache())} plans)")
+    if args.plan_cache:
+        plan_cache.flush()
 
 
 if __name__ == "__main__":

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeCell, SHAPE_CELLS
+from repro.configs.base import ModelConfig, ShapeCell
 from repro.models import model as M
 from repro.optim import AdamWConfig, adamw_init
 from repro.parallel import sharding as SH

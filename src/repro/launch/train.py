@@ -9,7 +9,6 @@ data feeding hook is in repro.data.pipeline).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import logging
 
 import jax

@@ -8,7 +8,6 @@ sharding so the Decision Module prices the *per-device* problem.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,6 @@ All projections are FalconGEMM-dispatched.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.falcon_gemm import FalconConfig, falcon_matmul
-from repro.parallel.sharding import BATCH, resolve_batch_axes, shard_act
+from repro.parallel.sharding import resolve_batch_axes
 from .layers import dense_init
 
 __all__ = ["moe_init", "moe_apply"]

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.falcon_gemm import FalconConfig, falcon_dense
 from repro.parallel.sharding import BATCH, shard_act

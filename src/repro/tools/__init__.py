@@ -1,0 +1,1 @@
+"""Operational CLIs: calibration / cache warming (``python -m repro.tools.tune``)."""

@@ -1,0 +1,110 @@
+"""Calibrate a hardware target and warm the persistent plan cache.
+
+  PYTHONPATH=src python -m repro.tools.tune --hardware cpu_host --backend jnp
+
+does three things:
+
+  1. runs the empirical autotuner (``core.autotune``) — times the backend's
+     GEMM, Group Combine A and the R-batched LCMA GEMM stage on a probe grid
+     and fits effective ``(FLOPS_x, FLOPS_+, beta, lcma_gemm_efficiency)``;
+  2. writes the calibrated :class:`HardwareProfile` as JSON (default:
+     ``~/.cache/falcon_gemm/profiles/<name>.json``, override with
+     ``FALCON_PROFILE_DIR`` or ``--out``) together with probe measurements
+     and per-scheme Pallas block plans as metadata;
+  3. warms the plan cache for a grid of serving shapes under the calibrated
+     profile and persists it next to the profile, so a serving process
+     (``repro.launch.serve --plan-cache ...``) starts with zero cold misses.
+
+After tuning, both of these resolve the calibrated numbers:
+
+  FalconConfig(hardware="<base>_autotuned")
+  decision.decide(M, N, K, "<base>_autotuned")
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+def _parse_shape(s: str) -> tuple[int, int, int]:
+    parts = [int(x) for x in s.replace("x", ",").split(",") if x]
+    if len(parts) != 3:
+        raise argparse.ArgumentTypeError(f"shape must be M,K,N — got {s!r}")
+    return tuple(parts)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.tools.tune",
+        description="Empirical autotune + plan-cache warmup for FalconGEMM.")
+    ap.add_argument("--hardware", default="cpu_host",
+                    help="base profile name to calibrate (default: cpu_host)")
+    ap.add_argument("--backend", default="jnp",
+                    choices=["jnp", "pallas", "pallas_interpret"])
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--scheme", default="strassen",
+                    help="probe LCMA used for combine/batched measurements")
+    ap.add_argument("--shape", action="append", type=_parse_shape, default=None,
+                    metavar="M,K,N", help="probe shape (repeatable)")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--name", default=None,
+                    help="name for the calibrated profile "
+                         "(default: <hardware>_autotuned)")
+    ap.add_argument("--out", default=None,
+                    help="profile JSON path (default: profile dir / <name>.json)")
+    ap.add_argument("--no-warm", dest="warm", action="store_false",
+                    help="skip plan-cache warmup")
+    ap.add_argument("--warm-dtype", default="bfloat16",
+                    help="dtype for plan-cache warmup decisions")
+    args = ap.parse_args(argv)
+
+    from repro.core import autotune, plan_cache
+    from repro.core.falcon_gemm import FalconConfig, plan
+    from repro.core.hardware import get_profile
+    from repro.core.workloads import warm_shapes
+
+    base = get_profile(args.hardware)
+    print(f"calibrating {base.name!r} via backend={args.backend} "
+          f"dtype={args.dtype} scheme={args.scheme} ...")
+    report, path = autotune.calibrate(
+        path=args.out, base=args.hardware, backend=args.backend,
+        shapes=args.shape, dtype=args.dtype, scheme=args.scheme,
+        reps=args.reps, warmup=args.warmup, name=args.name)
+    prof = report.profile
+
+    def tera(x):
+        return f"{x / 1e12:8.3f}T"
+
+    print(f"wrote {path}")
+    print(f"  {'quantity':24s} {'static':>10s} {'calibrated':>10s}")
+    print(f"  {'FLOPS_x (matmul)':24s} {tera(base.flops_for(args.dtype))} "
+          f"{tera(prof.flops_mul)}")
+    print(f"  {'FLOPS_+ (elementwise)':24s} {tera(base.flops_add)} "
+          f"{tera(prof.flops_add)}")
+    print(f"  {'beta (bytes/s)':24s} {tera(base.beta)} {tera(prof.beta)}")
+    print(f"  {'lcma_gemm_efficiency':24s} {base.lcma_gemm_efficiency:10.3f} "
+          f"{prof.lcma_gemm_efficiency:10.3f}")
+    if report.max_rel_err is not None:
+        print(f"  model-vs-measured pipeline rel.err: "
+              f"max {report.max_rel_err:.1%} over {len(report.model_rel_err)} probes")
+
+    if args.warm:
+        # next to the profile JSON, wherever --out put it
+        cache_path = os.path.join(os.path.dirname(os.path.abspath(path)),
+                                  f"{prof.name}.plans.json")
+        cache = plan_cache.configure(path=cache_path, autoload=False)
+        cfg = FalconConfig(hardware=prof.name)
+        n_lcma = 0
+        for (m, k, n) in warm_shapes():
+            d = plan(m, k, n, cfg, dtype=args.warm_dtype)
+            n_lcma += int(d.use_lcma)
+        cache.save()
+        print(f"warmed plan cache: {len(cache)} plans "
+              f"({n_lcma} pick an LCMA) -> {cache_path}")
+        print(f"serve with: python -m repro.launch.serve --arch <arch> "
+              f"--plan-cache {cache_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

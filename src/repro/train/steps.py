@@ -8,7 +8,6 @@ GSPMD gradient all-reduce with the int8 collective from
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +15,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule
 from repro.parallel.compression import compressed_psum_mean
 
 __all__ = ["make_train_step", "make_eval_step", "make_prefill_step",

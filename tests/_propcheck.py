@@ -1,0 +1,104 @@
+"""Property-testing shim: real ``hypothesis`` when installed, else a fallback.
+
+``hypothesis`` is a declared test dependency (``pip install -e ".[test]"``),
+but the suite must also run in minimal containers that only have jax/numpy/
+pytest. Importing this module instead of ``hypothesis`` directly keeps
+collection working either way:
+
+  * with hypothesis installed, ``given``/``settings``/``st`` are the real
+    thing — full shrinking, example databases, the works;
+  * without it, ``given`` degrades to a deterministic sampler: boundary
+    points first, then seeded-random draws up to ``max_examples``. No
+    shrinking, but the property still gets exercised on every run.
+
+Only the tiny subset this repo uses is shimmed (``st.integers``,
+``settings(max_examples=, deadline=)``).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import itertools
+    import random
+
+    class _Integers:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        @property
+        def corners(self) -> list[int]:
+            return sorted({self.lo, self.hi, (self.lo + self.hi) // 2})
+
+        def draw(self, rnd: random.Random) -> int:
+            return rnd.randint(self.lo, self.hi)
+
+    class _Floats:
+        def __init__(self, lo: float, hi: float):
+            self.lo, self.hi = float(lo), float(hi)
+
+        @property
+        def corners(self) -> list[float]:
+            return sorted({self.lo, self.hi, (self.lo + self.hi) / 2.0})
+
+        def draw(self, rnd: random.Random) -> float:
+            return rnd.uniform(self.lo, self.hi)
+
+    class _SampledFrom:
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        @property
+        def corners(self) -> list:
+            return self.elements
+
+        def draw(self, rnd: random.Random):
+            return rnd.choice(self.elements)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_kw) -> _Floats:
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements) -> _SampledFrom:
+            return _SampledFrom(elements)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 100, **_ignored):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco
+
+    def given(*strategies):
+        def deco(f):
+            n_default = getattr(f, "_max_examples", 25)
+
+            def wrapper():
+                seen = 0
+                # all-corner combinations first (capped), then seeded draws
+                for combo in itertools.islice(
+                        itertools.product(*(s.corners for s in strategies)),
+                        n_default):
+                    f(*combo)
+                    seen += 1
+                rnd = random.Random(0)
+                while seen < n_default:
+                    f(*(s.draw(rnd) for s in strategies))
+                    seen += 1
+
+            # NOT functools.wraps: pytest must see a zero-arg signature, or it
+            # would try to resolve the property's parameters as fixtures.
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco

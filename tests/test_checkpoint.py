@@ -1,5 +1,4 @@
 """Checkpointing: atomicity, integrity, retention, bf16, async, restore."""
-import json
 import os
 
 import jax

@@ -1,10 +1,11 @@
 """Decision Module: Table II closed forms, Eq. 8/10, selection behavior."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _propcheck import given, settings, st
 
 from repro.core import algorithms as alg, decision as dec
-from repro.core.hardware import TPU_V5E, HardwareProfile
+from repro.core.hardware import TPU_V5E
 
 
 def test_table2_combine_a_intensity():

@@ -1,5 +1,4 @@
 """Discovery module: the homotopy-ALS search finds real ternary schemes."""
-import pytest
 
 from repro.core import algorithms as alg
 from repro.core.discovery import discover
@@ -17,7 +16,6 @@ def test_discover_strassen_rank7():
 def test_discover_repairs_corrupted_scheme():
     """Seeding with a corrupted Strassen converges back to a valid scheme —
     the exact procedure that recovered our Laderman-family coefficients."""
-    import numpy as np
     s = alg.strassen()
     U = s.U.copy()
     U[0, 0, 1] = 1  # corrupt two entries

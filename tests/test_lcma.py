@@ -1,7 +1,7 @@
 """LCMA scheme library: tensor-identity validation + closure operations."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core import algorithms as alg
 from repro.core.lcma import LCMA, apply_reference, validate

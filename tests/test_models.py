@@ -118,7 +118,6 @@ def test_sliding_window_masks_old_tokens(rng):
 def test_param_counts_match_literature():
     """Full-config param counts are in the right ballpark (catches config typos)."""
     import repro.launch  # noqa: F401
-    from repro.launch.specs import abstract_state  # reuse the counter
     expect = {
         "granite_3_2b": (2.0e9, 3.5e9),
         "gemma3_27b": (24e9, 30e9),

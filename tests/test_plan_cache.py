@@ -1,0 +1,129 @@
+"""Plan cache: round-trip, key separation, hit short-circuit, LRU bounds."""
+import dataclasses
+
+import pytest
+
+from repro.core import decision as dec, plan_cache
+from repro.core.falcon_gemm import FalconConfig, plan
+from repro.core.hardware import CPU_HOST, TPU_V5E
+
+SHAPE = (16384, 5376, 21504)      # M, K, N — profitable on v5e => algo cached
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    """Isolate every test from the process-default cache."""
+    plan_cache.reset()
+    yield
+    plan_cache.reset()
+
+
+def _key(M, K, N, hw=TPU_V5E, dtype="bfloat16", **kw):
+    kw.setdefault("min_speedup", FalconConfig.min_speedup)
+    kw.setdefault("max_grid", FalconConfig.max_grid)
+    return plan_cache.plan_key(M, K, N, hw, dtype, **kw)
+
+
+def test_roundtrip_save_load(tmp_path):
+    path = str(tmp_path / "plans.json")
+    cache = plan_cache.configure(path=path, autoload=False)
+    d = plan(*SHAPE, FalconConfig())
+    assert d.use_lcma and len(cache) == 1
+    cache.save()
+
+    loaded = plan_cache.PlanCache(path=path)
+    assert len(loaded) == 1
+    hit = loaded.lookup(_key(*SHAPE))
+    assert hit is not None
+    assert hit.algo.name == d.algo.name
+    assert hit.gemm_seconds == pytest.approx(d.gemm_seconds)
+    assert hit.lcma_seconds == pytest.approx(d.lcma_seconds)
+    assert hit.estimates == ()   # breakdown dropped on disk, decision intact
+    assert hit.speedup == pytest.approx(d.speedup)
+
+
+def test_no_key_collisions_across_dtype_and_hardware():
+    keys = {
+        _key(*SHAPE),
+        _key(*SHAPE, dtype="float32"),
+        _key(*SHAPE, hw=CPU_HOST),
+        _key(*SHAPE, fused=False),
+        _key(*SHAPE, precombined_b=True),
+        _key(*SHAPE, candidates=("strassen",)),
+        _key(4096, 5376, 21504),
+    }
+    assert len(keys) == 7
+
+
+def test_recalibration_invalidates_fingerprint():
+    """Same profile *name*, different numbers => different key."""
+    recal = dataclasses.replace(TPU_V5E, beta=TPU_V5E.beta * 0.5)
+    assert _key(*SHAPE) != _key(*SHAPE, hw=recal)
+
+
+def test_cache_hit_short_circuits_enumeration(monkeypatch):
+    plan_cache.configure(path=None)
+    calls = {"n": 0}
+    real_decide = dec.decide
+
+    def counting_decide(*a, **kw):
+        calls["n"] += 1
+        return real_decide(*a, **kw)
+
+    monkeypatch.setattr(dec, "decide", counting_decide)
+    cfg = FalconConfig()
+    d1 = plan(*SHAPE, cfg)
+    d2 = plan(*SHAPE, cfg)
+    assert calls["n"] == 1                    # second call never enumerates
+    assert d2 is d1                           # in-memory hit: same object
+    st = plan_cache.stats()
+    assert st.hits == 1 and st.misses == 1 and st.inserts == 1
+    # opting out disables memoization
+    plan(*SHAPE, dataclasses.replace(cfg, use_plan_cache=False))
+    assert calls["n"] == 2
+
+
+def test_non_auto_modes_bypass_cache():
+    plan_cache.configure(path=None)
+    plan(*SHAPE, FalconConfig(mode="gemm"))
+    plan(*SHAPE, FalconConfig(mode="strassen"))
+    st = plan_cache.stats()
+    assert st.lookups == 0 and len(plan_cache.default_cache()) == 0
+
+
+def test_lru_eviction_is_bounded():
+    cache = plan_cache.PlanCache(capacity=2)
+    cfg = FalconConfig()
+    for M in (1024, 2048, 4096):
+        d = plan(M, 5376, 21504, dataclasses.replace(cfg, use_plan_cache=False))
+        cache.insert(_key(M, 5376, 21504), d)
+    assert len(cache) == 2
+    assert cache.stats.evictions == 1
+    assert cache.lookup(_key(1024, 5376, 21504)) is None   # oldest evicted
+    assert cache.lookup(_key(4096, 5376, 21504)) is not None
+
+
+def test_load_skips_unknown_schemes(tmp_path):
+    path = str(tmp_path / "plans.json")
+    cache = plan_cache.PlanCache(path=path, autoload=False)
+    d = plan(*SHAPE, FalconConfig(use_plan_cache=False))
+    cache.insert("good", d)
+    cache.save()
+
+    import json
+    doc = json.load(open(path))
+    bad = dict(doc["entries"][0][1], algo="no_such_scheme_xyz")
+    doc["entries"].append(["bad", bad])
+    json.dump(doc, open(path, "w"))
+
+    loaded = plan_cache.PlanCache(path=path)
+    assert loaded.lookup("good") is not None
+    assert loaded.lookup("bad") is None       # dropped, not crashed
+
+
+def test_shards_produce_distinct_cached_plans():
+    plan_cache.configure(path=None)
+    big = plan(*SHAPE, FalconConfig())
+    sharded = plan(*SHAPE, FalconConfig(shards=(16, 1, 16)))
+    assert len(plan_cache.default_cache()) == 2
+    assert big.speedup != sharded.speedup

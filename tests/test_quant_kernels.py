@@ -4,7 +4,6 @@ import numpy as np
 import pytest
 
 from repro.core import algorithms as alg
-from repro.kernels import ref
 from repro.kernels.group_combine import group_combine
 from repro.kernels.quant_combine import (fused_gemm_combine_h_quant,
                                          group_combine_quant,

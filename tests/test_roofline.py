@@ -1,6 +1,5 @@
 """Roofline: HLO collective parser + analytic cost model sanity."""
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.configs.base import SHAPE_CELLS

@@ -1,6 +1,5 @@
 """Sharding rules, divisibility filtering, shard_map MoE, compressed psum."""
 import numpy as np
-import pytest
 
 from conftest import run_multidevice
 
