@@ -14,9 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.api as falcon
 from repro.configs import registry
 from repro.core import decision as dec
-from repro.core.falcon_gemm import FalconConfig
 from repro.core.hardware import calibrate_cpu
 from repro.models import model as M
 from .common import time_fn
@@ -45,8 +45,10 @@ def run(seqs=(128, 256, 512), batch=2, verbose=True):
             M.falcon_config_for(cfg), hardware=hw.name, min_speedup=1.15)
 
         def fwd(fc):
-            return jax.jit(lambda p, t: M.forward(p, cfg, t, fcfg=fc,
-                                                  logits_mode="last")[0])
+            def run_fwd(p, t):
+                with falcon.use(fc):
+                    return M.forward(p, cfg, t, logits_mode="last")[0]
+            return jax.jit(run_fwd)
 
         t_std = time_fn(fwd(f_std), params, tokens)
         t_fal = time_fn(fwd(f_fal), params, tokens)

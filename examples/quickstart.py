@@ -1,16 +1,15 @@
-"""FalconGEMM quickstart: the three modules in 60 lines.
+"""FalconGEMM quickstart: the unified API in ~80 lines.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.api as falcon
 from repro.core import algorithms as alg, codegen, decision as dec
-from repro.core.falcon_gemm import FalconConfig, falcon_matmul
 from repro.core.hardware import TPU_V5E
 
-# --- 1. The LCMA library (validated schemes) -------------------------------
+# --- 1. The LCMA library (Decision Module's S_LCMA) -------------------------
 print("candidate LCMAs (Decision Module's S_LCMA):")
 for l in alg.candidates(max_grid=4)[:6]:
     print(f"  {l.name:12s} {l.key:16s} mult.saving={l.mult_saving:.1%}")
@@ -30,15 +29,44 @@ for M, K, N in [(512, 512, 512), (8192, 8192, 8192), (32768, 32768, 32768),
     print(f"  M={M:6d} K={K:6d} N={N:6d} -> {pick:14s} "
           f"predicted {eff:6.1f} eff-TF/s ({eff/197:.0%} of peak)")
 
-# --- 4. The drop-in matmul ---------------------------------------------------
+# --- 4. Context-scoped dispatch: falcon.use + dense/dot_general/einsum -----
 rng = np.random.default_rng(0)
 A = jnp.asarray(rng.standard_normal((300, 200)), jnp.float32)
 B = jnp.asarray(rng.standard_normal((200, 100)), jnp.float32)
-C = falcon_matmul(A, B, FalconConfig(mode="strassen"))
-err = float(jnp.max(jnp.abs(C - A @ B)))
-print(f"\nfalcon_matmul vs A@B: max |err| = {err:.2e}  (arbitrary shapes pad)")
+with falcon.use(falcon.FalconConfig(mode="strassen")):
+    C = falcon.matmul(A, B)                       # drop-in a @ b
+    err = float(jnp.max(jnp.abs(C - A @ B)))
+    print(f"\nfalcon.matmul vs A@B: max |err| = {err:.2e}  (arbitrary shapes pad)")
 
-# --- 5. Pallas kernel path (TPU target; interpret-validated here) -----------
-C2 = falcon_matmul(A, B, FalconConfig(mode="strassen", backend="pallas_interpret"))
-print(f"pallas pipeline      max |err| = {float(jnp.max(jnp.abs(C2 - A @ B))):.2e}")
+    # batched/transposed contractions normalize down to the same 2-D core:
+    q = jnp.asarray(rng.standard_normal((2, 64, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 80, 4, 32)), jnp.float32)
+    S = falcon.einsum("bqhd,bkhd->bhqk", q, k)    # attention scores
+    err = float(jnp.max(jnp.abs(S - jnp.einsum("bqhd,bkhd->bhqk", q, k))))
+    print(f"falcon.einsum (attention) max |err| = {err:.2e}")
+
+# --- 5. First-class precombined weights (offline Combine B, §IV-C) ---------
+W = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32)
+pw = falcon.plan_weight(W, cfg=falcon.FalconConfig(mode="strassen"))
+x = jnp.asarray(rng.standard_normal((4, 64, 256)), jnp.float32)
+y = falcon.dense(x, pw, cfg=falcon.FalconConfig(mode="strassen"))
+print(f"PlannedWeight[{pw.algo}] B~{tuple(pw.bt.shape)}: "
+      f"max |err| = {float(jnp.max(jnp.abs(y - x @ W))):.2e}")
+
+# --- 6. Backend registry: execution strategies are pluggable ---------------
+calls = []
+
+def traced_jnp(a2, b2, l, cfg):
+    calls.append((a2.shape, b2.shape, l.name))
+    return falcon.get_backend("jnp").apply(a2, b2, l, cfg)
+
+falcon.register_backend("traced", traced_jnp)
+C2 = falcon.matmul(A, B, cfg=falcon.FalconConfig(mode="strassen", backend="traced"))
+print(f"registered backend 'traced' handled {calls}; "
+      f"available: {falcon.available_backends()}")
+
+# --- 7. Pallas kernel path (TPU target; interpret-validated here) ----------
+C3 = falcon.matmul(A, B, cfg=falcon.FalconConfig(mode="strassen",
+                                                 backend="pallas_interpret"))
+print(f"pallas pipeline      max |err| = {float(jnp.max(jnp.abs(C3 - A @ B))):.2e}")
 print("\nOK")

@@ -1,8 +1,11 @@
-"""Serving example: batched prefill + decode with offline Combine-B weights.
+"""Serving example: batched prefill + decode on PlannedWeight params.
 
-Shows the paper's §IV-C inference integration: for layers where the Decision
-Module picks an LCMA, the static weight matrix is pre-combined ONCE
-(offline Combine B) so serving pays only Combine A + fused GEMM/Combine H.
+Shows the paper's §IV-C inference integration through the unified API: the
+model's static weights are lifted to ``PlannedWeight``s (``precombine_params``)
+so every projection where the Decision Module picks an LCMA pays only
+Combine A + the fused GEMM/Combine H at serve time — Combine B ran ONCE at
+load. The planned generation is checked allclose against the eager
+(non-precombined) path.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -12,22 +15,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.api as falcon
 from repro.configs import registry
-from repro.core import algorithms as alg
-from repro.core.falcon_gemm import (FalconConfig, matmul_with_precombined,
-                                    precombine_weights)
 from repro.models import model as M
 from repro.train.steps import make_decode_step, make_prefill_step
 
-# --- offline Combine B on a static weight ----------------------------------
+# --- offline Combine B on a single static weight ---------------------------
 rng = np.random.default_rng(0)
-l = alg.get("strassen")
+cfg_force = falcon.FalconConfig(mode="strassen")
 W = jnp.asarray(rng.standard_normal((512, 2048)), jnp.float32)
-Wt = precombine_weights(W, l)          # (R, K/2, N/2) — done once at load
+pw = falcon.plan_weight(W, cfg=cfg_force)        # B~ combined once at load
 x = jnp.asarray(rng.standard_normal((4, 64, 512)), jnp.float32)
-y = matmul_with_precombined(x, Wt, l, n_logical=2048)
-print(f"offline Combine B: weight (512,2048) -> B~ {tuple(Wt.shape)}; "
-      f"serve err={float(jnp.max(jnp.abs(y - x @ W))):.2e}")
+with falcon.use(cfg_force):
+    y = falcon.dense(x, pw)
+print(f"offline Combine B: weight (512,2048) -> B~ {tuple(pw.bt.shape)} "
+      f"[{pw.algo}]; serve err={float(jnp.max(jnp.abs(y - x @ W))):.2e}")
 
 # --- batched generation with the reduced model -----------------------------
 cfg = registry.smoke_config("granite_3_2b")
@@ -37,16 +39,37 @@ tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
 prefill = jax.jit(make_prefill_step(cfg, max_len=S + GEN))
 decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
 
-logits, cache = prefill(params, tokens)
-jax.block_until_ready(logits)
-t0 = time.perf_counter()
-outs = []
-for i in range(GEN):
-    nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-    outs.append(np.asarray(nxt))
-    logits, cache = decode(params, cache, nxt[:, None], S + i)
-jax.block_until_ready(logits)
-dt = time.perf_counter() - t0
-print(f"generated {GEN} tokens x batch {B}: {B*GEN/dt:.1f} tok/s "
-      f"({dt/GEN*1e3:.1f} ms/step)")
-print("sequences:", np.stack(outs, 1)[:2].tolist())
+
+def generate(p):
+    logits, cache = prefill(p, tokens)
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    outs, logit_trace = [], [logits[:, -1]]
+    for i in range(GEN):
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        outs.append(np.asarray(nxt))
+        logits, cache = decode(p, cache, nxt[:, None], S + i)
+        logit_trace.append(logits[:, -1])
+    jax.block_until_ready(logits)
+    return np.stack(outs, 1), jnp.stack(logit_trace, 1), time.perf_counter() - t0
+
+
+with falcon.use(cfg_force):
+    # eager path: every projection runs Combine A + Combine B + GEMM + H
+    eager_tokens, eager_logits, dt_eager = generate(params)
+
+    # planned path: Combine B is offline — params become PlannedWeights
+    planned_params, n_planned = falcon.precombine_params(params, m_hint=B * S)
+    planned_tokens, planned_logits, dt_planned = generate(planned_params)
+
+err = float(jnp.max(jnp.abs(planned_logits - eager_logits)))
+match = float(np.mean(planned_tokens == eager_tokens))
+print(f"precombined {n_planned} weight tensor(s) into PlannedWeights")
+print(f"planned-vs-eager: logits max |err| = {err:.2e}, "
+      f"token agreement = {match:.0%}")
+assert np.allclose(np.asarray(planned_logits), np.asarray(eager_logits),
+                   rtol=1e-2, atol=1e-2), "planned serving diverged from eager"
+print(f"generated {GEN} tokens x batch {B}: "
+      f"{B*GEN/dt_planned:.1f} tok/s planned ({dt_planned/GEN*1e3:.1f} ms/step) "
+      f"vs {B*GEN/dt_eager:.1f} tok/s eager")
+print("sequences:", planned_tokens[:2].tolist())

@@ -1,0 +1,46 @@
+"""The FalconGEMM public API — ``import repro.api as falcon``.
+
+One import gives the whole dispatch surface:
+
+    import repro.api as falcon
+
+    with falcon.use(falcon.FalconConfig(hardware="tpu_v5e")):
+        y = falcon.dense(x, w)                       # context config
+        s = falcon.einsum("bqhd,bkhd->bhqk", q, k)   # hits the Decision Module
+        c = falcon.dot_general(a, b, dimension_numbers)
+
+    pw = falcon.plan_weight(w, m_hint=batch * prompt_len)   # offline Combine B
+    y = falcon.dense(x, pw)                                 # serving fast path
+
+    falcon.register_backend("mine", my_apply_fn)            # pluggable exec
+    falcon.dense(x, w, cfg=falcon.FalconConfig(backend="mine"))
+
+Compatibility forms (``falcon_matmul(a, b, cfg)`` / ``falcon_dense(x, w,
+cfg)`` with an explicit config) keep working; see ``docs/api.md`` for the
+old-to-new migration table.
+"""
+from __future__ import annotations
+
+from repro.core.backends import (Backend, available_backends, get_backend,
+                                 register_backend, unregister_backend)
+from repro.core.engine import (FalconEngine, PlannedWeight, active_config,
+                               current_config, dense, dot_general, einsum,
+                               matmul, plan_weight, precombine_params, use)
+from repro.core.falcon_gemm import (FalconConfig, falcon_dense, falcon_matmul,
+                                    matmul_with_precombined, plan,
+                                    precombine_weights)
+
+__all__ = [
+    # context-scoped config
+    "use", "current_config", "active_config", "FalconConfig", "FalconEngine",
+    # dispatch entry points
+    "dense", "matmul", "dot_general", "einsum", "plan",
+    # precombined weights (offline Combine B)
+    "PlannedWeight", "plan_weight", "precombine_params",
+    "precombine_weights", "matmul_with_precombined",
+    # backend registry
+    "Backend", "register_backend", "unregister_backend", "get_backend",
+    "available_backends",
+    # compatibility forms
+    "falcon_matmul", "falcon_dense",
+]

@@ -93,8 +93,26 @@ class Decision:
         return self.lcma_seconds if self.use_lcma else self.gemm_seconds
 
 
+_DTYPE_BYTES = {"float64": 8, "float32": 4, "bfloat16": 2, "float16": 2,
+                "int8": 1}
+
+
 def _dtype_bytes(dtype: str) -> int:
-    return {"float64": 8, "float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}[dtype]
+    b = _DTYPE_BYTES.get(dtype)
+    if b is not None:
+        return b
+    try:
+        # jnp.dtype knows the extended types numpy alone does not
+        # (float8_e4m3fn & friends via ml_dtypes). Lazy import keeps the
+        # decision model importable without initializing jax.
+        import jax.numpy as jnp
+        b = int(jnp.dtype(dtype).itemsize)
+    except TypeError as e:
+        raise ValueError(
+            f"decision model: unknown dtype {dtype!r}; pass a numpy/ml_dtypes "
+            f"dtype name (e.g. 'bfloat16', 'float8_e4m3fn', 'int32')") from e
+    _DTYPE_BYTES[dtype] = b
+    return b
 
 
 def _pad_up(x: int, d: int) -> int:

@@ -1,0 +1,479 @@
+"""FalconEngine: the unified dispatch surface for FalconGEMM.
+
+This module is the paper's Deployment-Module promise made real at the API
+level — *portable execution across hardware and input configurations*:
+
+* **Context-scoped config** — ``with use(cfg): ...`` installs a
+  :class:`~repro.core.falcon_gemm.FalconConfig` in a contextvar;
+  ``current_config()`` resolves it anywhere below (layers no longer thread an
+  ``fcfg`` argument). Explicit ``cfg=`` arguments remain as overrides.
+* **General entry points** — :func:`dot_general` / :func:`einsum` normalize
+  batched and transposed contractions down to the planned 2-D core, so
+  attention/MoE/SSD contractions hit the Decision Module, not just plain
+  dense layers.
+* **Backends** — execution strategies resolve through the
+  ``core.backends`` registry (``FalconConfig.backend`` is just a name).
+* **First-class precombined weights** — :class:`PlannedWeight` carries a
+  weight together with its chosen LCMA and offline-combined B̃ (paper §IV-C
+  "offline Combine B"); ``dense``/``dot_general``/``matmul`` accept it
+  transparently, and :func:`precombine_params` lifts a whole model pytree.
+
+``repro.api`` re-exports this surface; ``import repro.api as falcon``.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import warnings
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import algorithms, backends
+from .falcon_gemm import (FalconConfig, _lcma_apply, matmul_with_precombined,
+                          plan, precombine_weights)
+from .lcma import LCMA
+
+__all__ = ["use", "current_config", "active_config", "maybe_use",
+           "config_scope", "matmul", "dense", "dot_general", "einsum",
+           "PlannedWeight", "plan_weight", "precombine_params",
+           "FalconEngine"]
+
+
+# ---------------------------------------------------------------------------
+# Context-scoped configuration
+# ---------------------------------------------------------------------------
+
+_CONFIG: contextvars.ContextVar[FalconConfig | None] = \
+    contextvars.ContextVar("falcon_config", default=None)
+
+
+@contextlib.contextmanager
+def use(cfg: FalconConfig):
+    """Install ``cfg`` as the ambient FalconGEMM config for this context.
+
+    Nests: the innermost ``use`` wins; on exit the previous config is
+    restored (also on exception). Config resolution is a trace-time concern,
+    so wrapping a ``jax.jit`` *call site* is sufficient — the contextvar is
+    read while the function traces.
+    """
+    token = _CONFIG.set(cfg)
+    try:
+        yield cfg
+    finally:
+        _CONFIG.reset(token)
+
+
+def active_config() -> FalconConfig | None:
+    """The config installed by the innermost ``use``, or None outside any."""
+    return _CONFIG.get()
+
+
+def current_config() -> FalconConfig:
+    """The ambient config: innermost ``use``, else the default FalconConfig."""
+    return _CONFIG.get() or FalconConfig()
+
+
+def _resolve(cfg: FalconConfig | None) -> FalconConfig:
+    return cfg if cfg is not None else current_config()
+
+
+@contextlib.contextmanager
+def maybe_use(cfg: FalconConfig | None):
+    """``use(cfg)`` when cfg is not None; no-op otherwise (shim helper)."""
+    if cfg is None:
+        yield None
+    else:
+        with use(cfg) as c:
+            yield c
+
+
+def warn_deprecated_fcfg(where: str, stacklevel: int = 3) -> None:
+    warnings.warn(
+        f"{where}: passing a FalconConfig argument is deprecated; wrap "
+        f"the call in `with falcon.use(cfg):` instead",
+        DeprecationWarning, stacklevel=stacklevel)
+
+
+def deprecated_fcfg(fcfg: FalconConfig | None, where: str):
+    """Deprecation shim for the legacy per-call ``fcfg`` parameter.
+
+    Returns a context manager that installs ``fcfg`` (warning at the call
+    site) or does nothing when ``fcfg`` is None — so ported code paths are
+    warning-free under ``-W error::DeprecationWarning``.
+    """
+    if fcfg is not None:
+        warn_deprecated_fcfg(where, stacklevel=4)
+    return maybe_use(fcfg)
+
+
+@contextlib.contextmanager
+def config_scope(fcfg: FalconConfig | None, where: str, default_factory):
+    """Model-entry config resolution: deprecated override, ambient, default.
+
+    The ordering is load-bearing: the deprecated ``fcfg`` (if any) is
+    installed *before* ``active_config()`` is consulted, so an explicit
+    legacy argument still overrides the ambient context; absent both, the
+    config comes from ``default_factory()`` (e.g. the model's own
+    ``falcon_config_for``).
+    """
+    with deprecated_fcfg(fcfg, where):
+        with use(active_config() or default_factory()):
+            yield
+
+
+# ---------------------------------------------------------------------------
+# Planned (precombined) weights
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PlannedWeight:
+    """A weight bundled with its chosen LCMA and offline-combined B̃.
+
+    ``dense`` / ``matmul`` / ``dot_general`` accept a PlannedWeight wherever
+    a (K, N) weight matrix is expected. ``algo is None`` marks a weight the
+    Decision Module left on standard GEMM. Registered as a pytree whose
+    children are the arrays, so planned params flow through ``jax.jit``,
+    ``lax.scan`` layer stacking, and checkpoint trees unchanged; the scheme
+    name and logical shape ride in the static treedef.
+
+    Stacked weights (leading layer/codebook dim) are supported: children are
+    stacked alike, ``pw[i]`` slices both.
+    """
+
+    w: Any                  # original weight (K, N) [or (L, K, N)]; None if dropped
+    bt: Any                 # precombined B̃ (R, K/k, N/n) [or (L, ...)]; None if GEMM
+    algo: str | None        # LCMA scheme name; None => standard GEMM
+    k: int                  # logical K of the matrix (trailing dims)
+    n: int                  # logical N
+
+    @property
+    def lcma(self) -> LCMA | None:
+        return algorithms.get(self.algo) if self.algo is not None else None
+
+    @property
+    def precombined(self) -> bool:
+        return self.bt is not None
+
+    def __getitem__(self, idx) -> "PlannedWeight":
+        return PlannedWeight(
+            w=None if self.w is None else self.w[idx],
+            bt=None if self.bt is None else self.bt[idx],
+            algo=self.algo, k=self.k, n=self.n)
+
+    def tree_flatten(self):
+        return (self.w, self.bt), (self.algo, self.k, self.n)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        w, bt = children
+        algo, k, n = aux
+        return cls(w=w, bt=bt, algo=algo, k=k, n=n)
+
+
+def plan_weight(w: jnp.ndarray, cfg: FalconConfig | None = None,
+                m_hint: int = 1024, keep_weight: bool = True) -> PlannedWeight:
+    """Plan a static weight for serving: pick an LCMA and precombine B̃.
+
+    The Decision Module is consulted with ``precombined_b=True`` — the right
+    profitability criterion for a weight whose Combine B runs offline — at an
+    activation-rows hint ``m_hint`` (use the serving prefill M). The decision
+    goes through the plan cache like every other ``plan()`` call. Weights of
+    rank 3 are treated as stacked (leading layer/codebook dim) and combined
+    per slice; the per-matrix shape is the trailing (K, N).
+
+    ``keep_weight=False`` drops the raw weight (halves serving memory for the
+    planned layers); the precombined path is then always taken.
+    """
+    cfg = _resolve(cfg)
+    if w.ndim not in (2, 3):
+        return PlannedWeight(w=w, bt=None, algo=None,
+                             k=int(w.shape[-2]) if w.ndim >= 2 else 0,
+                             n=int(w.shape[-1]))
+    K, N = int(w.shape[-2]), int(w.shape[-1])
+    d = plan(m_hint, K, N, cfg, str(w.dtype), precombined_b=True)
+    if not d.use_lcma:
+        return PlannedWeight(w=w, bt=None, algo=None, k=K, n=N)
+    l = d.algo
+    bt = precombine_weights(w, l) if w.ndim == 2 else \
+        jax.vmap(lambda wi: precombine_weights(wi, l))(w)
+    return PlannedWeight(w=w if keep_weight else None, bt=bt,
+                         algo=l.name, k=K, n=N)
+
+
+_DEFAULT_PRECOMBINE_PATTERNS = (
+    "w_q", "w_k", "w_v", "w_o", "mlp_gate", "mlp_up", "mlp_down",
+    "lm_head", "ssm_in", "ssm_out",
+)
+
+
+def precombine_params(params, cfg: FalconConfig | None = None,
+                      m_hint: int = 1024, keep_weight: bool = True,
+                      patterns: tuple[str, ...] = _DEFAULT_PRECOMBINE_PATTERNS):
+    """Lift a model param pytree into PlannedWeights for serving.
+
+    Dense projection leaves whose path matches ``patterns`` are planned
+    (and precombined where the Decision Module picks an LCMA); everything
+    else — including leaves that are already ``PlannedWeight``s, so the
+    lift is idempotent — passes through untouched.
+    Returns (new_params, n_planned).
+    """
+    cfg = _resolve(cfg)
+    n_planned = 0
+
+    def maybe_plan(path, leaf):
+        nonlocal n_planned
+        if isinstance(leaf, PlannedWeight):
+            return leaf
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if leaf.ndim not in (2, 3) or not any(pat in keys for pat in patterns):
+            return leaf
+        pw = plan_weight(leaf, cfg, m_hint=m_hint, keep_weight=keep_weight)
+        if pw.precombined:
+            n_planned += 1
+            return pw
+        return leaf  # GEMM-bound weight: keep the raw array
+
+    out = jax.tree_util.tree_map_with_path(
+        maybe_plan, params, is_leaf=lambda x: isinstance(x, PlannedWeight))
+    return out, n_planned
+
+
+def _apply_planned(x: jnp.ndarray, pw: PlannedWeight,
+                   cfg: FalconConfig) -> jnp.ndarray:
+    """x (..., K) @ PlannedWeight -> (..., N); serving fast path."""
+    *lead, K = x.shape
+    if pw.algo is None:
+        return jnp.matmul(x, pw.w)
+    be = backends.get_backend(cfg.backend)
+    if be.dense_hook is not None and pw.w is not None:
+        # Layer-level placements (e.g. shard_map_local's per-device local
+        # matmul) take precedence: running the precombined combines on a
+        # GSPMD-sharded global array is exactly the resharding pathology
+        # that hook exists to avoid.
+        out = be.dense_hook(x, pw.w, cfg)
+        if out is not None:
+            return out
+    x2 = x.reshape(-1, K)
+    if cfg.mode == pw.algo or pw.w is None:
+        use_pre = True           # forced scheme, or raw weight dropped
+    elif not cfg.enabled or cfg.mode == "gemm":
+        use_pre = False
+    else:
+        # Re-decide for the *actual* M (decode M is tiny, prefill M is large)
+        # with Combine B free; restrict candidates to the precombined scheme.
+        d = plan(x2.shape[0], K, pw.n,
+                 dataclasses.replace(cfg, mode="auto", candidates=(pw.algo,)),
+                 str(x.dtype), precombined_b=True)
+        use_pre = d.use_lcma
+    if not use_pre:
+        return jnp.matmul(x, pw.w)
+    if be.apply_precombined is not None:
+        out2 = be.apply_precombined(x2, pw.bt, pw.lcma, pw.n, cfg)
+    else:  # backend has no native precombined path: generated jnp combines
+        out2 = matmul_with_precombined(x2, pw.bt, pw.lcma, pw.n, cfg)
+    return out2.reshape(*lead, pw.n)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch entry points
+# ---------------------------------------------------------------------------
+
+def matmul(a: jnp.ndarray, b, cfg: FalconConfig | None = None,
+           dtype_hint: str | None = None) -> jnp.ndarray:
+    """``a @ b`` with FalconGEMM dispatch. ``a``: (..., M, K), ``b``: (K, N)."""
+    cfg = _resolve(cfg)
+    if isinstance(b, PlannedWeight):
+        return _apply_planned(a, b, cfg)
+    *lead, M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    Mflat = int(np.prod(lead)) * M if lead else M
+    dtype = dtype_hint or str(a.dtype)
+    d = plan(Mflat, K, N, cfg, dtype)
+    if not d.use_lcma:
+        return jnp.matmul(a, b)
+    a2 = a.reshape(Mflat, K) if lead else a
+    c = _lcma_apply(a2, b, d.algo, cfg)
+    return c.reshape(*lead, M, N) if lead else c
+
+
+def dense(x: jnp.ndarray, w, cfg: FalconConfig | None = None) -> jnp.ndarray:
+    """Linear layer contraction: x (..., K) @ w (K, N) [w may be planned]."""
+    cfg = _resolve(cfg)
+    if isinstance(w, PlannedWeight):
+        return _apply_planned(x, w, cfg)
+    hook = backends.get_backend(cfg.backend).dense_hook
+    if hook is not None:
+        out = hook(x, w, cfg)
+        if out is not None:
+            return out
+    *lead, K = x.shape
+    return matmul(x.reshape(-1, K), w, cfg).reshape(*lead, w.shape[1])
+
+
+def dot_general(a: jnp.ndarray, b, dimension_numbers,
+                cfg: FalconConfig | None = None, precision=None,
+                preferred_element_type=None) -> jnp.ndarray:
+    """``jax.lax.dot_general`` with FalconGEMM dispatch.
+
+    Batched and transposed contractions are normalized down to the planned
+    2-D core: free/contracting dims are transposed adjacent and flattened to
+    a (M, K) x (K, N) problem (vmapped over batch dims), which the Decision
+    Module prices per batch element. When it declines (or an explicit
+    ``preferred_element_type`` asks for non-input accumulation semantics the
+    LCMA combines don't honor), the call lowers to ``lax.dot_general``
+    untouched — bitwise-identical fallback.
+    """
+    cfg = _resolve(cfg)
+    (ac, bc), (ab, bb) = dimension_numbers
+    ac, bc, ab, bb = (tuple(int(i) for i in t) for t in (ac, bc, ab, bb))
+    dn = ((ac, bc), (ab, bb))
+    if isinstance(b, PlannedWeight):
+        if ab or bb or ac != (a.ndim - 1,) or bc != (0,):
+            raise ValueError(
+                "PlannedWeight only supports the canonical dense contraction "
+                f"(((a.ndim-1,), (0,)), ((), ())); got {dn}")
+        return _apply_planned(a, b, cfg)
+    a_free = tuple(i for i in range(a.ndim) if i not in ac and i not in ab)
+    b_free = tuple(i for i in range(b.ndim) if i not in bc and i not in bb)
+    M = int(np.prod([a.shape[i] for i in a_free])) if a_free else 1
+    K = int(np.prod([a.shape[i] for i in ac])) if ac else 1
+    N = int(np.prod([b.shape[i] for i in b_free])) if b_free else 1
+    lcma_ok = (M > 0 and N > 0 and K > 0
+               and (preferred_element_type is None
+                    or jnp.dtype(preferred_element_type) == a.dtype))
+    d = plan(M, K, N, cfg, str(a.dtype)) if lcma_ok else None
+    if d is None or not d.use_lcma:
+        return jax.lax.dot_general(a, b, dn, precision=precision,
+                                   preferred_element_type=preferred_element_type)
+    # Normalize: a -> (batch..., free..., contract...), b -> (batch...,
+    # contract..., free...), flatten to (B, M, K) x (B, K, N).
+    a_perm = ab + a_free + ac
+    b_perm = bb + bc + b_free
+    at = a if a_perm == tuple(range(a.ndim)) else jnp.transpose(a, a_perm)
+    bt = b if b_perm == tuple(range(b.ndim)) else jnp.transpose(b, b_perm)
+    batch_shape = tuple(a.shape[i] for i in ab)
+    out_shape = batch_shape + tuple(a.shape[i] for i in a_free) \
+        + tuple(b.shape[i] for i in b_free)
+    if not ab:
+        c = _lcma_apply(at.reshape(M, K), bt.reshape(K, N), d.algo, cfg)
+        return c.reshape(out_shape)
+    Bsz = int(np.prod(batch_shape))
+    c3 = jax.vmap(lambda x2, y2: _lcma_apply(x2, y2, d.algo, cfg))(
+        at.reshape(Bsz, M, K), bt.reshape(Bsz, K, N))
+    return c3.reshape(out_shape)
+
+
+def einsum(subscripts: str, *operands, cfg: FalconConfig | None = None,
+           precision=None) -> jnp.ndarray:
+    """``jnp.einsum`` with FalconGEMM dispatch for two-operand contractions.
+
+    Two-operand subscripts without ellipsis/repeats/sum-out reduce to
+    :func:`dot_general` (and so hit the Decision Module); anything else
+    falls back to ``jnp.einsum`` unchanged.
+    """
+    if len(operands) == 2 and isinstance(subscripts, str):
+        a, b = operands
+        parsed = _einsum_dimension_numbers(subscripts, a.ndim, b.ndim)
+        if parsed is not None:
+            dn, perm = parsed
+            out = dot_general(a, b, dn, cfg=cfg, precision=precision)
+            if perm != tuple(range(len(perm))):
+                out = jnp.transpose(out, perm)
+            return out
+    return jnp.einsum(subscripts, *operands, precision=precision)
+
+
+def _einsum_dimension_numbers(subscripts: str, a_ndim: int, b_ndim: int):
+    """Two-operand einsum -> (dimension_numbers, output transpose) or None.
+
+    None means "not expressible as a single dot_general" (ellipsis, repeated
+    labels within an operand, summed-out free labels, rank mismatch) and the
+    caller should fall back to ``jnp.einsum``.
+    """
+    subs = subscripts.replace(" ", "")
+    if "." in subs:
+        return None
+    if "->" in subs:
+        lhs, out = subs.split("->")
+    else:
+        lhs, out = subs, None
+    terms = lhs.split(",")
+    if len(terms) != 2:
+        return None
+    ta, tb = terms
+    if len(ta) != a_ndim or len(tb) != b_ndim:
+        return None
+    if len(set(ta)) != len(ta) or len(set(tb)) != len(tb):
+        return None
+    if out is None:  # implicit mode: alphabetic order of non-shared labels
+        out = "".join(sorted(c for c in set(ta + tb)
+                             if (ta + tb).count(c) == 1))
+    if len(set(out)) != len(out) or any(c not in ta + tb for c in out):
+        return None
+    shared = [c for c in ta if c in tb]
+    batch = tuple(c for c in shared if c in out)
+    contract = tuple(c for c in shared if c not in out)
+    a_free = [c for c in ta if c not in tb]
+    b_free = [c for c in tb if c not in ta]
+    if any(c not in out for c in a_free + b_free):
+        return None  # summed-out free label: not a plain contraction
+    dn = ((tuple(ta.index(c) for c in contract),
+           tuple(tb.index(c) for c in contract)),
+          (tuple(ta.index(c) for c in batch),
+           tuple(tb.index(c) for c in batch)))
+    natural = list(batch) + a_free + b_free   # dot_general output order
+    perm = tuple(natural.index(c) for c in out)
+    return dn, perm
+
+
+# ---------------------------------------------------------------------------
+# The engine object: a bound config + the dispatch surface
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FalconEngine:
+    """A FalconConfig bound to the dispatch surface.
+
+    The module-level functions resolve config from the ambient context; an
+    engine pins one explicitly — handy for services juggling several
+    hardware/policy profiles at once:
+
+        eng = FalconEngine(FalconConfig(hardware="tpu_v5e", backend="pallas"))
+        y = eng.dense(x, w)
+        with eng.activate():     # or: make it the ambient config
+            y = falcon_dense(x, w)
+    """
+
+    config: FalconConfig = dataclasses.field(default_factory=FalconConfig)
+
+    def activate(self):
+        return use(self.config)
+
+    def plan(self, M: int, K: int, N: int, dtype: str = "bfloat16",
+             precombined_b: bool = False):
+        return plan(M, K, N, self.config, dtype, precombined_b=precombined_b)
+
+    def matmul(self, a, b, **kw):
+        return matmul(a, b, cfg=self.config, **kw)
+
+    def dense(self, x, w):
+        return dense(x, w, cfg=self.config)
+
+    def dot_general(self, a, b, dimension_numbers, **kw):
+        return dot_general(a, b, dimension_numbers, cfg=self.config, **kw)
+
+    def einsum(self, subscripts, *operands, **kw):
+        return einsum(subscripts, *operands, cfg=self.config, **kw)
+
+    def plan_weight(self, w, **kw):
+        return plan_weight(w, cfg=self.config, **kw)
+
+    def precombine_params(self, params, **kw):
+        return precombine_params(params, cfg=self.config, **kw)

@@ -1,17 +1,21 @@
-"""FalconGEMM public API: decision-dispatched LCMA matmul + model integration.
+"""FalconGEMM dispatch core: decision-dispatched LCMA matmul + planning.
 
-``falcon_matmul(a, b, cfg)`` is the drop-in ``a @ b`` replacement used by the
+``falcon_matmul(a, b)`` is the drop-in ``a @ b`` replacement used by the
 model zoo's linear layers (the paper's PyTorch-backend integration, §IV-C):
 
   1. the Decision Module predicts, from the *static trace-time shapes* (scaled
      to per-device shapes by ``cfg.shards`` under pjit), whether an LCMA beats
      standard GEMM on the target hardware,
-  2. if yes, the Deployment Module's generated fused implementation is traced
-     (pure JAX ops -> GSPMD-shardable; or the Pallas kernel pipeline on TPU),
+  2. if yes, the chosen execution **backend** (``core.backends`` registry:
+     generated pure-JAX combines, the Pallas kernel pipeline, the shard_map
+     local-matmul placement, or anything user-registered) runs the scheme,
   3. otherwise it falls back to ``jnp.dot`` — "keep the best performance".
 
-Static weights can be pre-combined offline (``precombine_weights``), removing
-the Combine-B stage from serving entirely (paper §IV-C "offline Combine B").
+Configuration is context-scoped (``repro.api.use`` / ``FalconEngine``); the
+explicit ``cfg`` argument survives as a compatibility override. Static weights
+can be pre-combined offline (``precombine_weights`` / ``PlannedWeight``),
+removing the Combine-B stage from serving entirely (paper §IV-C "offline
+Combine B").
 """
 from __future__ import annotations
 
@@ -22,7 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import algorithms, codegen, decision as dec, plan_cache
+from repro import compat
+
+from . import algorithms, backends, codegen, decision as dec, plan_cache
 from .hardware import HardwareProfile, get_profile
 from .lcma import LCMA
 
@@ -38,7 +44,7 @@ class FalconConfig:
 
     enabled: bool = True
     hardware: str = "tpu_v5e"
-    backend: str = "jnp"             # "jnp" | "pallas" | "pallas_interpret"
+    backend: str = "jnp"             # any name in core.backends registry
     fused: bool = True
     mode: str = "auto"               # "auto" | "gemm" | explicit scheme name
     candidates: tuple[str, ...] | None = None
@@ -60,6 +66,31 @@ class FalconConfig:
         return algorithms.candidates(max_grid=self.max_grid)
 
 
+_warned_shards: set[tuple] = set()
+
+
+def _local_shape(M: int, K: int, N: int, cfg: FalconConfig) -> tuple[int, int, int]:
+    """Scale a global shape to the per-device shape by ``cfg.shards``.
+
+    Non-divisible shards round UP (ceil division): the per-device problem the
+    partitioner actually materializes is the padded shard, and silently
+    truncating (the old ``max(M // sm, 1)``) made the Decision Module price a
+    smaller matmul than any device runs. Warns once per (shape, shards).
+    """
+    sm, sk, sn = cfg.shards
+    if min(sm, sk, sn) < 1:
+        raise ValueError(f"FalconConfig.shards must be >= 1, got {cfg.shards}")
+    if M % sm or K % sk or N % sn:
+        key = (M, K, N, cfg.shards)
+        if key not in _warned_shards:
+            _warned_shards.add(key)
+            log.warning(
+                "FalconGEMM: shards %s do not divide (M=%d, K=%d, N=%d); "
+                "pricing the rounded-up per-device shard (%d, %d, %d)",
+                cfg.shards, M, K, N, -(-M // sm), -(-K // sk), -(-N // sn))
+    return max(-(-M // sm), 1), max(-(-K // sk), 1), max(-(-N // sn), 1)
+
+
 def plan(M: int, K: int, N: int, cfg: FalconConfig, dtype: str = "bfloat16",
          precombined_b: bool = False) -> dec.Decision:
     """Run the Decision Module for a (possibly sharded) matmul shape.
@@ -68,8 +99,7 @@ def plan(M: int, K: int, N: int, cfg: FalconConfig, dtype: str = "bfloat16",
     local shape, dtype, hardware fingerprint and dispatch policy), so repeated
     trace-time shapes — the serving hot path — skip candidate enumeration.
     """
-    sm, sk, sn = cfg.shards
-    Ml, Kl, Nl = max(M // sm, 1), max(K // sk, 1), max(N // sn, 1)
+    Ml, Kl, Nl = _local_shape(M, K, N, cfg)
     if cfg.mode == "gemm" or not cfg.enabled:
         t = dec.gemm_time(Ml, Nl, Kl, cfg.profile, dtype)
         return dec.Decision(Ml, Nl, Kl, dtype, None, t, None, ())
@@ -108,50 +138,35 @@ def _pad2(x: jnp.ndarray, d0: int, d1: int) -> jnp.ndarray:
 
 
 def _lcma_apply(a2: jnp.ndarray, b: jnp.ndarray, l: LCMA, cfg: FalconConfig) -> jnp.ndarray:
-    M, K = a2.shape
-    _, N = b.shape
-    if cfg.backend in ("pallas", "pallas_interpret"):
-        from repro.kernels import ops
-        return ops.falcon_matmul_pallas(
-            a2, b, l, interpret=(cfg.backend == "pallas_interpret"))
-    gen = codegen.generate(l, codegen.CodegenOptions(fused=cfg.fused))
-    ap = _pad2(a2, l.m, l.k)
-    bp = _pad2(b, l.k, l.n)
-    c = gen.fn(ap, bp)
-    return c[:M, :N]
+    """Execute the chosen LCMA on 2-D operands via the registered backend."""
+    return backends.get_backend(cfg.backend).apply(a2, b, l, cfg)
 
 
-def falcon_matmul(a: jnp.ndarray, b: jnp.ndarray, cfg: FalconConfig | None = None,
+def falcon_matmul(a: jnp.ndarray, b, cfg: FalconConfig | None = None,
                   dtype_hint: str | None = None) -> jnp.ndarray:
-    """``a @ b`` with FalconGEMM dispatch. ``a``: (..., M, K), ``b``: (K, N)."""
-    cfg = cfg or FalconConfig()
-    *lead, M, K = a.shape
-    K2, N = b.shape
-    assert K == K2, (a.shape, b.shape)
-    Mflat = int(np.prod(lead)) * M if lead else M
-    dtype = dtype_hint or str(a.dtype)
-    d = plan(Mflat, K, N, cfg, dtype)
-    if not d.use_lcma:
-        return jnp.matmul(a, b)
-    a2 = a.reshape(Mflat, K) if lead else a
-    c = _lcma_apply(a2, b, d.algo, cfg)
-    return c.reshape(*lead, M, N) if lead else c
+    """``a @ b`` with FalconGEMM dispatch. ``a``: (..., M, K), ``b``: (K, N).
+
+    Compatibility form of the unified API: ``cfg=None`` resolves the
+    context-scoped config (``repro.api.use``). ``b`` may be a
+    :class:`~repro.core.engine.PlannedWeight` (offline Combine-B weights).
+    """
+    from . import engine
+    return engine.matmul(a, b, cfg=cfg, dtype_hint=dtype_hint)
 
 
-def falcon_dense(x: jnp.ndarray, w: jnp.ndarray, cfg: FalconConfig | None = None) -> jnp.ndarray:
-    """Linear layer contraction: x (..., K) @ w (K, N)."""
-    cfg = cfg or FalconConfig()
-    if cfg.backend == "shard_map_local":
-        out = _falcon_dense_shardmap(x, w, cfg)
-        if out is not None:
-            return out
-    *lead, K = x.shape
-    return falcon_matmul(x.reshape(-1, K), w, cfg).reshape(*lead, w.shape[1])
+def falcon_dense(x: jnp.ndarray, w, cfg: FalconConfig | None = None) -> jnp.ndarray:
+    """Linear layer contraction: x (..., K) @ w (K, N).
+
+    ``w`` may be a raw weight matrix or a ``PlannedWeight``; ``cfg=None``
+    resolves the context-scoped config.
+    """
+    from . import engine
+    return engine.dense(x, w, cfg=cfg)
 
 
 def _falcon_dense_shardmap(x: jnp.ndarray, w: jnp.ndarray,
                            cfg: FalconConfig) -> jnp.ndarray | None:
-    """Apply LCMA to the per-device LOCAL matmul inside ``jax.shard_map``.
+    """Apply LCMA to the per-device LOCAL matmul inside ``shard_map``.
 
     Lesson from EXPERIMENTS.md §Perf A1: LCMA submatrix slicing on a
     GSPMD-sharded global matmul makes the partitioner reshard every slice
@@ -166,9 +181,8 @@ def _falcon_dense_shardmap(x: jnp.ndarray, w: jnp.ndarray,
     from repro.parallel.sharding import get_parallel_style, resolve_batch_axes
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.sharding.get_abstract_mesh()
-    if (mesh is None or not mesh.axis_names
-            or get_parallel_style() != "fsdp_only"):
+    mesh = compat.get_abstract_mesh()
+    if mesh is None or get_parallel_style() != "fsdp_only":
         return None
     sizes = dict(mesh.shape)
     axes = tuple(a for a in resolve_batch_axes() if a in set(mesh.axis_names))
@@ -192,7 +206,7 @@ def _falcon_dense_shardmap(x: jnp.ndarray, w: jnp.ndarray,
     # flatten tokens so the (possibly small) batch dim times seq shards over
     # the full mesh: (B, S, K) -> (B*S, K) with B*S % n_devices == 0
     xspec = P(axes, None)
-    out = jax.shard_map(
+    out = compat.shard_map(
         body, in_specs=(xspec, P(None, None)),
         out_specs=xspec, check_vma=False)(x.reshape(T, K), w)
     return out.reshape(*lead, N)
@@ -211,7 +225,9 @@ def precombine_weights(w: jnp.ndarray, l: LCMA) -> jnp.ndarray:
 def matmul_with_precombined(a: jnp.ndarray, bt: jnp.ndarray, l: LCMA,
                             n_logical: int, cfg: FalconConfig | None = None) -> jnp.ndarray:
     """Serving-path matmul against pre-combined weights B̃ (R, K/k, N/n)."""
-    cfg = cfg or FalconConfig()
+    if cfg is None:
+        from . import engine
+        cfg = engine.current_config()
     gen = codegen.generate(l, codegen.CodegenOptions(
         fused=cfg.fused, precombined_b=True))
     *lead, M, K = a.shape

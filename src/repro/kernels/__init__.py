@@ -1,6 +1,8 @@
 from .fused_gemm import fused_gemm_combine_h, tiled_matmul
 from .group_combine import group_combine
-from .ops import falcon_matmul_pallas, matmul_pallas
+from .ops import (falcon_matmul_pallas, falcon_matmul_pallas_precombined,
+                  matmul_pallas)
 
 __all__ = ["fused_gemm_combine_h", "tiled_matmul", "group_combine",
-           "falcon_matmul_pallas", "matmul_pallas"]
+           "falcon_matmul_pallas", "falcon_matmul_pallas_precombined",
+           "matmul_pallas"]

@@ -48,6 +48,32 @@ def falcon_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, l: LCMA,
     return c[:M, :N]
 
 
+@partial(jax.jit, static_argnames=("l", "n_logical", "block_combine",
+                                   "block_gemm", "interpret"))
+def falcon_matmul_pallas_precombined(
+        a: jnp.ndarray, bt: jnp.ndarray, l: LCMA, n_logical: int,
+        block_combine: tuple[int, int] | None = None,
+        block_gemm: tuple[int, int, int] | None = None,
+        interpret: bool = False) -> jnp.ndarray:
+    """Serving-path kernel pipeline against pre-combined B̃ (R, K/k, N/n).
+
+    The offline Combine-B (paper §IV-C) variant of ``falcon_matmul_pallas``:
+    Combine B never runs — only Group Combine A and the fused GEMM+Combine H.
+    ``bt`` layout matches ``codegen``'s ``combine_b`` output (verified
+    bitwise-identical to the kernel ``group_combine``), so weights combined
+    offline by either path are interchangeable.
+    """
+    M, K = a.shape
+    ap = _pad2(a, l.m, l.k)
+    assert ap.shape[1] // l.k == bt.shape[1], (ap.shape, bt.shape, l.key)
+    at = group_combine(ap, l.U, block=block_combine, interpret=interpret)
+    cp = fused_gemm_combine_h(at, bt, l.W, block=block_gemm,
+                              out_dtype=a.dtype, interpret=interpret)
+    m, n, X, Z = cp.shape
+    c = cp.transpose(0, 2, 1, 3).reshape(m * X, n * Z)
+    return c[:M, :n_logical]
+
+
 @partial(jax.jit, static_argnames=("block", "interpret"))
 def matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
                   block: tuple[int, int, int] | None = None,

@@ -26,6 +26,8 @@ import traceback
 
 import jax
 
+import repro.api as falcon
+from repro import compat
 from repro.configs import SHAPE_CELLS, get_config, list_archs
 from repro.configs.base import ModelConfig
 from repro.launch.mesh import make_production_mesh
@@ -40,16 +42,15 @@ from repro.train import steps as ST
 
 def build_step_fn(cfg: ModelConfig, cell, mesh, cs: SP.CellSpec,
                   opt_dtype: str = "float32", microbatches: int = 1):
-    fcfg = M.falcon_config_for(cfg, dict(mesh.shape))
     if cs.kind == "train":
         fn = ST.make_train_step(cfg, AdamWConfig(state_dtype=opt_dtype),
-                                fcfg=fcfg, microbatches=microbatches)
+                                microbatches=microbatches)
         donate = (0, 1)
     elif cs.kind == "prefill":
-        fn = ST.make_prefill_step(cfg, max_len=cell.seq_len, fcfg=fcfg)
+        fn = ST.make_prefill_step(cfg, max_len=cell.seq_len)
         donate = ()
     else:
-        fn = ST.make_decode_step(cfg, fcfg=fcfg)
+        fn = ST.make_decode_step(cfg)
         donate = (1,)
     return jax.jit(fn, donate_argnums=donate)
 
@@ -111,7 +112,8 @@ def run_cell(arch: str, shape: str, mesh_name: str, out_dir: str | None,
         cs = SP.input_specs(cfg, cell, mesh, opt_dtype=opt_dtype or "float32")
         step = build_step_fn(cfg, cell, mesh, cs, opt_dtype=opt_dtype or "float32",
                              microbatches=microbatches)
-        with jax.sharding.set_mesh(mesh):
+        with compat.set_mesh(mesh), \
+                falcon.use(M.falcon_config_for(cfg, dict(mesh.shape))):
             lowered = step.lower(*cs.args)
             t_lower = time.time() - t0
             compiled = lowered.compile()

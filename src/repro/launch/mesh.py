@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
@@ -15,13 +17,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi_pod adds a leading 2-pod axis (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """Whatever devices exist, as a (data, model=1) mesh — smoke/example runs."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((n, 1), ("data", "model"))

@@ -1,9 +1,13 @@
 """Serving launcher: batched prefill + decode with the FalconGEMM backend.
 
 ``python -m repro.launch.serve --arch granite_3_2b --batch 4 --prompt-len 64
---gen 32`` runs prefill over a token batch and auto-regressive decode, using
-offline-precombined weights where the Decision Module selects an LCMA
-(paper §IV-C's PyTorch-backend serving experiment, TPU/JAX edition).
+--gen 32`` runs prefill over a token batch and auto-regressive decode. The
+FalconGEMM policy is installed once with ``falcon.use`` (context-scoped
+config); static weights are lifted to ``PlannedWeight``s — the paper §IV-C
+"offline Combine B": for every projection where the Decision Module selects
+an LCMA, B̃ is combined once at load time and serving pays only
+Combine A + the fused GEMM/Combine-H (``--no-precombine`` opts out). All
+planning runs through the persistent plan cache (``--plan-cache``).
 """
 from __future__ import annotations
 
@@ -14,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.api as falcon
+from repro import compat
 from repro.configs import get_config, smoke_config
 from repro.core import plan_cache
 from repro.launch.mesh import make_local_mesh
@@ -30,6 +36,10 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--precombine", action="store_true", default=True,
+                    help="lift static weights to PlannedWeights (offline "
+                         "Combine B) where the Decision Module picks an LCMA")
+    ap.add_argument("--no-precombine", dest="precombine", action="store_false")
     ap.add_argument("--plan-cache", default=None, metavar="PATH",
                     help="persistent Decision plan cache (JSON, written by "
                          "repro.tools.tune); loaded before tracing and "
@@ -52,10 +62,17 @@ def main() -> None:
                  else (args.batch, args.prompt_len))
     tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, tok_shape), jnp.int32)
 
-    prefill = jax.jit(make_prefill_step(cfg, max_len=max_len, fcfg=fcfg))
-    decode = jax.jit(make_decode_step(cfg, fcfg=fcfg), donate_argnums=(1,))
+    prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
 
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh), falcon.use(fcfg):
+        if args.precombine:
+            # Offline Combine B against the prefill shape (the M the Decision
+            # Module should price); decode re-decides per its own tiny M.
+            params, n_planned = falcon.precombine_params(
+                params, m_hint=args.batch * args.prompt_len)
+            print(f"offline Combine B: {n_planned} weight tensor(s) "
+                  f"precombined into PlannedWeights")
         t0 = time.perf_counter()
         if cfg.frontend == "vision_patches":
             pe = jnp.asarray(rng.standard_normal(

@@ -13,6 +13,8 @@ import logging
 
 import jax
 
+import repro.api as falcon
+from repro import compat
 from repro.configs import get_config, smoke_config
 from repro.data import DataConfig, SyntheticLMData
 from repro.launch.mesh import make_local_mesh, make_production_mesh
@@ -51,7 +53,7 @@ def main() -> None:
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     opt_cfg = AdamWConfig(lr=args.lr)
     opt_state = adamw_init(params, opt_cfg)
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh), falcon.use(fcfg):
         psh = SH.param_sharding(params, mesh, rules)
         params = jax.device_put(params, psh)
         opt_state = jax.device_put(opt_state, {
@@ -65,9 +67,9 @@ def main() -> None:
             mesh=mesh, batch_spec=P(rules.batch))
         if args.compressed_dp:
             step = steps.make_compressed_dp_train_step(
-                cfg, opt_cfg, mesh, fcfg=fcfg, total_steps=args.steps)
+                cfg, opt_cfg, mesh, total_steps=args.steps)
         else:
-            step = make_train_step(cfg, opt_cfg, total_steps=args.steps, fcfg=fcfg)
+            step = make_train_step(cfg, opt_cfg, total_steps=args.steps)
         step = jax.jit(step, donate_argnums=(0, 1))
 
         loop = TrainLoop(

@@ -1,9 +1,12 @@
 """Core transformer layers (functional, pytree params, FalconGEMM-backed).
 
-Every dense projection routes through ``repro.core.falcon_gemm.falcon_dense``
-so the paper's technique is a first-class backend of the whole model zoo. The
-FalconConfig travels with the ModelConfig; ``shards`` reflects each matmul's
-sharding so the Decision Module prices the *per-device* problem.
+Every dense projection routes through ``falcon_dense`` and the attention
+contractions through ``falcon.einsum``, so the paper's technique is a
+first-class backend of the whole model zoo. Dispatch policy is the
+context-scoped config (``repro.api.use``); the legacy per-call ``fcfg``
+argument survives as a deprecated override. ``shards`` in the active config
+reflects each matmul's sharding so the Decision Module prices the
+*per-device* problem.
 """
 from __future__ import annotations
 
@@ -13,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine
 from repro.core.falcon_gemm import FalconConfig, falcon_dense
 from repro.parallel.sharding import BATCH, shard_act
 
@@ -79,14 +83,14 @@ def attention_scores(q, k, v, qpos, kpos, window, kv_valid=None):
     if rep > 1:
         k = jnp.repeat(k, rep, axis=2)
         v = jnp.repeat(v, rep, axis=2)
-    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    logits = engine.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
     logits *= 1.0 / np.sqrt(hd)
     m = _mask(qpos[0], kpos[0], window)  # positions identical across batch
     if kv_valid is not None:
         m = m & kv_valid[0][None, :]
     logits = jnp.where(m[None, None], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
-    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return engine.einsum("bhqk,bkhd->bqhd", p, v)
 
 
 def flash_attention(q, k, v, qpos, kpos, window, kv_valid=None,
@@ -136,41 +140,45 @@ def attn_init(key, dims: AttnDims, dtype) -> dict:
 
 
 def attn_apply(p: dict, x: jnp.ndarray, dims: AttnDims, positions, theta: float,
-               window, fcfg: FalconConfig, cache: dict | None = None,
-               cache_index=None):
+               window, fcfg: FalconConfig | None = None,
+               cache: dict | None = None, cache_index=None):
     """Attention with optional KV cache.
 
     prefill/train: cache=None -> self-attention over x.
     decode: cache={'k','v'} (B, S_max, Hkv, hd); x is (B, 1, d) at
     ``cache_index``; returns (out, new_cache).
+
+    Dispatch policy comes from the context config; ``fcfg`` is a deprecated
+    per-call override.
     """
-    B, S, d = x.shape
-    H, Hkv, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
-    q = shard_act(falcon_dense(x, p["w_q"], fcfg).reshape(B, S, H, hd),
-                  BATCH, None, "model")
-    k = shard_act(falcon_dense(x, p["w_k"], fcfg).reshape(B, S, Hkv, hd),
-                  BATCH, None, "model")
-    v = shard_act(falcon_dense(x, p["w_v"], fcfg).reshape(B, S, Hkv, hd),
-                  BATCH, None, "model")
-    q = rope(q, positions, theta)
-    k = rope(k, positions, theta)
-    if cache is None:
-        out = flash_attention(q, k, v, positions, positions, window)
-        new_cache = None
-    else:
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, cache_index, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, cache_index, 0, 0))
-        S_max = ck.shape[1]
-        kpos = jnp.broadcast_to(jnp.arange(S_max)[None], (B, S_max))
-        # everything written so far (prompt prefill writes S tokens at once)
-        kv_valid = kpos < cache_index + S
-        out = flash_attention(q, ck, cv, positions, kpos, window,
-                              kv_valid=kv_valid)
-        new_cache = {"k": ck, "v": cv}
-    out = falcon_dense(out.reshape(B, S, H * hd), p["w_o"], fcfg)
-    return shard_act(out, BATCH, None, None), new_cache
+    with engine.deprecated_fcfg(fcfg, "attn_apply"):
+        B, S, d = x.shape
+        H, Hkv, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
+        q = shard_act(falcon_dense(x, p["w_q"]).reshape(B, S, H, hd),
+                      BATCH, None, "model")
+        k = shard_act(falcon_dense(x, p["w_k"]).reshape(B, S, Hkv, hd),
+                      BATCH, None, "model")
+        v = shard_act(falcon_dense(x, p["w_v"]).reshape(B, S, Hkv, hd),
+                      BATCH, None, "model")
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+        if cache is None:
+            out = flash_attention(q, k, v, positions, positions, window)
+            new_cache = None
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                              (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                              (0, cache_index, 0, 0))
+            S_max = ck.shape[1]
+            kpos = jnp.broadcast_to(jnp.arange(S_max)[None], (B, S_max))
+            # everything written so far (prompt prefill writes S tokens at once)
+            kv_valid = kpos < cache_index + S
+            out = flash_attention(q, ck, cv, positions, kpos, window,
+                                  kv_valid=kv_valid)
+            new_cache = {"k": ck, "v": cv}
+        out = falcon_dense(out.reshape(B, S, H * hd), p["w_o"])
+        return shard_act(out, BATCH, None, None), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -191,12 +199,14 @@ def mlp_init(key, d: int, d_ff: int, dtype, mlp_type: str = "swiglu") -> dict:
     }
 
 
-def mlp_apply(p: dict, x: jnp.ndarray, fcfg: FalconConfig) -> jnp.ndarray:
-    u = shard_act(falcon_dense(x, p["mlp_up"], fcfg), BATCH, None, "model")
-    if "mlp_gate" in p:
-        g = shard_act(falcon_dense(x, p["mlp_gate"], fcfg), BATCH, None, "model")
-        h = jax.nn.silu(g) * u
-    else:
-        h = jax.nn.gelu(u)
-    out = falcon_dense(h, p["mlp_down"], fcfg)
-    return shard_act(out, BATCH, None, None)
+def mlp_apply(p: dict, x: jnp.ndarray,
+              fcfg: FalconConfig | None = None) -> jnp.ndarray:
+    with engine.deprecated_fcfg(fcfg, "mlp_apply"):
+        u = shard_act(falcon_dense(x, p["mlp_up"]), BATCH, None, "model")
+        if "mlp_gate" in p:
+            g = shard_act(falcon_dense(x, p["mlp_gate"]), BATCH, None, "model")
+            h = jax.nn.silu(g) * u
+        else:
+            h = jax.nn.gelu(u)
+        out = falcon_dense(h, p["mlp_down"])
+        return shard_act(out, BATCH, None, None)

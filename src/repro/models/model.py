@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine
 from repro.core.falcon_gemm import FalconConfig, falcon_dense
 from repro.parallel.sharding import BATCH, shard_act
 from repro.configs.base import ModelConfig
@@ -141,7 +142,7 @@ def _embed_tokens(params, cfg: ModelConfig, tokens, patch_embeds=None):
     return x
 
 
-def _layer_body(x, lp, window, cfg: ModelConfig, fcfg, positions, theta,
+def _layer_body(x, lp, window, cfg: ModelConfig, positions, theta,
                 cache_layer=None, cache_index=None):
     """One decoder layer. Returns (x, new_cache_layer, aux)."""
     dims = None if cfg.family == "ssm" else L.AttnDims(
@@ -154,7 +155,7 @@ def _layer_body(x, lp, window, cfg: ModelConfig, fcfg, positions, theta,
     is_decode = cache_layer is not None and h.shape[1] == 1
     if cfg.family == "ssm":
         st = None if cache_layer is None else cache_layer.get("state")
-        y, new_state = SSD.ssd_apply(lp["ssm"], h, cfg, fcfg, state=st,
+        y, new_state = SSD.ssd_apply(lp["ssm"], h, cfg, state=st,
                                      decode=is_decode)
         if cache_layer is not None:
             new_cache["state"] = new_state
@@ -162,9 +163,9 @@ def _layer_body(x, lp, window, cfg: ModelConfig, fcfg, positions, theta,
     if cfg.family == "hybrid":
         kv = None if cache_layer is None else {"k": cache_layer["k"], "v": cache_layer["v"]}
         ya, kv_new = L.attn_apply(lp["attn"], h, dims, positions, theta, window,
-                                  fcfg, cache=kv, cache_index=cache_index)
+                                  cache=kv, cache_index=cache_index)
         st = None if cache_layer is None else cache_layer.get("state")
-        ys, new_state = SSD.ssd_apply(lp["ssm"], h, cfg, fcfg, state=st,
+        ys, new_state = SSD.ssd_apply(lp["ssm"], h, cfg, state=st,
                                       decode=is_decode)
         y = 0.5 * (L.rmsnorm(ya, lp["attn_norm"], cfg.norm_eps)
                    + L.rmsnorm(ys, lp["ssm_norm"], cfg.norm_eps))
@@ -174,7 +175,7 @@ def _layer_body(x, lp, window, cfg: ModelConfig, fcfg, positions, theta,
     else:
         kv = None if cache_layer is None else {"k": cache_layer["k"], "v": cache_layer["v"]}
         y, kv_new = L.attn_apply(lp["attn"], h, dims, positions, theta, window,
-                                 fcfg, cache=kv, cache_index=cache_index)
+                                 cache=kv, cache_index=cache_index)
         x = x + y
         if cache_layer is not None:
             new_cache = {"k": kv_new["k"], "v": kv_new["v"]}
@@ -191,10 +192,10 @@ def _layer_body(x, lp, window, cfg: ModelConfig, fcfg, positions, theta,
                               * cfg.capacity_factor)), 8)
         cap = -(-cap // 256) * 256 if cap > 256 else cap  # shardable capacity
         y2, aux = MOE.moe_apply(lp["moe"], h2, cfg.experts_per_token,
-                                cfg.capacity_factor, fcfg,
+                                cfg.capacity_factor,
                                 deterministic_capacity=cap)
     elif cfg.d_ff > 0:
-        y2 = L.mlp_apply(lp["mlp"], h2, fcfg)
+        y2 = L.mlp_apply(lp["mlp"], h2)
     else:
         y2 = jnp.zeros_like(x)
     return x + y2, new_cache, aux
@@ -209,8 +210,19 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
     "all" (full logits — small vocab / smoke only; training uses
     ``lm_loss`` with chunked cross-entropy instead).
     Returns (out, new_cache, aux_loss).
+
+    FalconGEMM policy resolves from the ambient context (``falcon.use``),
+    falling back to this model's ``falcon_config_for``; ``fcfg`` is a
+    deprecated per-call override.
     """
-    fcfg = fcfg or falcon_config_for(cfg)
+    with engine.config_scope(fcfg, "forward", lambda: falcon_config_for(cfg)):
+        return _forward(params, cfg, tokens, patch_embeds=patch_embeds,
+                        cache=cache, cache_index=cache_index,
+                        logits_mode=logits_mode)
+
+
+def _forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
+             cache=None, cache_index=None, logits_mode: str = "none"):
     x = shard_act(_embed_tokens(params, cfg, tokens, patch_embeds),
                   BATCH, None, None)
     B, S = x.shape[0], x.shape[1]
@@ -229,7 +241,7 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
             cl = None
         else:
             lp, w, cl = xs
-        fn = lambda x_: _layer_body(x_, lp, w, cfg, fcfg, positions, theta,
+        fn = lambda x_: _layer_body(x_, lp, w, cfg, positions, theta,
                                     cache_layer=cl, cache_index=cache_index)
         if cfg.remat and cache is None:
             if cfg.remat_policy == "dots":
@@ -251,11 +263,17 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
         return x, new_cache, aux
     if logits_mode == "last":
         x = x[:, -1:]
-    logits = compute_logits(params, cfg, x, fcfg)
+    logits = compute_logits(params, cfg, x)
     return logits, new_cache, aux
 
 
-def compute_logits(params, cfg: ModelConfig, x, fcfg: FalconConfig):
+def compute_logits(params, cfg: ModelConfig, x, fcfg: FalconConfig | None = None):
+    with engine.config_scope(fcfg, "compute_logits",
+                             lambda: falcon_config_for(cfg)):
+        return _compute_logits(params, cfg, x)
+
+
+def _compute_logits(params, cfg: ModelConfig, x):
     Vp = padded_vocab(cfg)
 
     def mask_pad(logits):
@@ -265,20 +283,26 @@ def compute_logits(params, cfg: ModelConfig, x, fcfg: FalconConfig):
         return jnp.where(pad_mask, logits, -1e30)
 
     if cfg.frontend == "audio_codebooks":
-        outs = [falcon_dense(x, params["lm_head"][c], fcfg)
+        outs = [falcon_dense(x, params["lm_head"][c])
                 for c in range(cfg.num_codebooks)]
         return mask_pad(jnp.stack(outs, axis=2))  # (B, S, CB, Vp)
     w = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
-    return mask_pad(falcon_dense(x, w, fcfg))
+    return mask_pad(falcon_dense(x, w))
 
 
 # ---------------------------------------------------------------------------
 # Loss (chunked cross-entropy: never materialize (B, S, V) for big vocabs)
 # ---------------------------------------------------------------------------
 
-def chunked_xent(params, cfg: ModelConfig, hidden, labels, fcfg,
-                 chunk: int = 512):
+def chunked_xent(params, cfg: ModelConfig, hidden, labels,
+                 fcfg: FalconConfig | None = None, chunk: int = 512):
     """hidden: (B, S, d); labels: (B, S[, CB]) -> mean xent (f32)."""
+    with engine.config_scope(fcfg, "chunked_xent",
+                             lambda: falcon_config_for(cfg)):
+        return _chunked_xent(params, cfg, hidden, labels, chunk=chunk)
+
+
+def _chunked_xent(params, cfg: ModelConfig, hidden, labels, chunk: int = 512):
     B, S = hidden.shape[0], hidden.shape[1]
     chunk = min(chunk, S)
     while S % chunk:
@@ -290,7 +314,7 @@ def chunked_xent(params, cfg: ModelConfig, hidden, labels, fcfg,
 
     @jax.checkpoint  # recompute per-chunk logits in bwd: (B,chunk,V) never stored
     def chunk_loss(h, lab):
-        logits = compute_logits(params, cfg, h, fcfg).astype(jnp.float32)
+        logits = _compute_logits(params, cfg, h).astype(jnp.float32)
         logits = shard_act(logits, BATCH, None, "model")
         logz = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
@@ -307,13 +331,13 @@ def chunked_xent(params, cfg: ModelConfig, hidden, labels, fcfg,
 
 def lm_loss(params, cfg: ModelConfig, batch: dict, fcfg: FalconConfig | None = None):
     """batch: {'tokens', 'labels'[, 'patch_embeds']} -> (loss, metrics)."""
-    fcfg = fcfg or falcon_config_for(cfg)
-    hidden, _, aux = forward(params, cfg, batch["tokens"],
-                             patch_embeds=batch.get("patch_embeds"),
-                             fcfg=fcfg, logits_mode="none")
-    labels = batch["labels"]
-    if cfg.frontend == "vision_patches":
-        hidden = hidden[:, -labels.shape[1]:]  # loss on the text positions
-    xent = chunked_xent(params, cfg, hidden, labels, fcfg)
-    loss = xent + 0.01 * aux
-    return loss, {"xent": xent, "aux": aux}
+    with engine.config_scope(fcfg, "lm_loss", lambda: falcon_config_for(cfg)):
+        hidden, _, aux = forward(params, cfg, batch["tokens"],
+                                 patch_embeds=batch.get("patch_embeds"),
+                                 logits_mode="none")
+        labels = batch["labels"]
+        if cfg.frontend == "vision_patches":
+            hidden = hidden[:, -labels.shape[1]:]  # loss on the text positions
+        xent = chunked_xent(params, cfg, hidden, labels)
+        loss = xent + 0.01 * aux
+        return loss, {"xent": xent, "aux": aux}

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.core import engine
 from repro.core.falcon_gemm import FalconConfig, falcon_matmul
 from repro.parallel.sharding import resolve_batch_axes
 from .layers import dense_init
@@ -43,12 +45,12 @@ def moe_init(key, d: int, d_ff: int, num_experts: int, dtype) -> dict:
     }
 
 
-def _expert_ffn(p_gate, p_up, p_down, xb: jnp.ndarray, fcfg: FalconConfig) -> jnp.ndarray:
+def _expert_ffn(p_gate, p_up, p_down, xb: jnp.ndarray) -> jnp.ndarray:
     """xb: (E, C, d) -> (E, C, d). Batched per-expert SwiGLU via vmap'd falcon."""
     def one(x, wg, wu, wd):
-        g = falcon_matmul(x, wg, fcfg)
-        u = falcon_matmul(x, wu, fcfg)
-        return falcon_matmul(jax.nn.silu(g) * u, wd, fcfg)
+        g = falcon_matmul(x, wg)
+        u = falcon_matmul(x, wu)
+        return falcon_matmul(jax.nn.silu(g) * u, wd)
 
     return jax.vmap(one)(xb, p_gate, p_up, p_down)
 
@@ -67,7 +69,7 @@ def _aux_loss(probs, expert_idx, E):
 
 
 def _dispatch_compute_combine(xt, probs, gate_vals, expert_idx, C, p_gate,
-                              p_up, p_down, fcfg, E_local, e_offset):
+                              p_up, p_down, E_local, e_offset):
     """Token-local dispatch into (E_local, C, d), FFN, weighted combine.
 
     Per-slot loop (k is small) so no (T*k, d) token replication is ever
@@ -90,7 +92,7 @@ def _dispatch_compute_combine(xt, probs, gate_vals, expert_idx, C, p_gate,
         buf = buf.at[e_rel[:, s], jnp.where(keep[:, s], pos[:, s], C - 1)].add(
             xt * w, mode="drop")
 
-    yb = _expert_ffn(p_gate, p_up, p_down, buf, fcfg)          # (E_local, C, d)
+    yb = _expert_ffn(p_gate, p_up, p_down, buf)                # (E_local, C, d)
 
     y = jnp.zeros_like(xt)
     for s in range(top_k):
@@ -100,7 +102,7 @@ def _dispatch_compute_combine(xt, probs, gate_vals, expert_idx, C, p_gate,
     return y
 
 
-def _moe_dense(p, x, top_k, C, fcfg):
+def _moe_dense(p, x, top_k, C):
     B, S, d = x.shape
     E = p["router"].shape[1]
     xt = x.reshape(B * S, d)
@@ -108,11 +110,11 @@ def _moe_dense(p, x, top_k, C, fcfg):
     probs, gate_vals, expert_idx = _route(xt, logits, top_k)
     y = _dispatch_compute_combine(xt, probs, gate_vals, expert_idx, C,
                                   p["moe_gate"], p["moe_up"], p["moe_down"],
-                                  fcfg, E_local=E, e_offset=0)
+                                  E_local=E, e_offset=0)
     return y.reshape(B, S, d), _aux_loss(probs, expert_idx, E)
 
 
-def _moe_shardmap(p, x, top_k, C_global, fcfg, mesh):
+def _moe_shardmap(p, x, top_k, C_global, mesh):
     B, S, d = x.shape
     E = p["router"].shape[1]
     names = set(mesh.axis_names)
@@ -136,7 +138,7 @@ def _moe_shardmap(p, x, top_k, C_global, fcfg, mesh):
         probs, gate_vals, expert_idx = _route(xt, logits, top_k)
         midx = jax.lax.axis_index("model")
         y = _dispatch_compute_combine(
-            xt, probs, gate_vals, expert_idx, C_local, wg, wu, wd, fcfg,
+            xt, probs, gate_vals, expert_idx, C_local, wg, wu, wd,
             E_local=E_local, e_offset=midx * E_local)
         # sum each token's k expert contributions across EP shards
         y = jax.lax.psum(y, "model")
@@ -145,7 +147,7 @@ def _moe_shardmap(p, x, top_k, C_global, fcfg, mesh):
             aux = jax.lax.pmean(aux, dp_axes)
         return y.reshape(Bl, Sl, d), aux
 
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         body,
         in_specs=(xspec, P(None, "model"), P("model", None, None),
                   P("model", None, None), P("model", None, None)),
@@ -156,15 +158,22 @@ def _moe_shardmap(p, x, top_k, C_global, fcfg, mesh):
 
 
 def moe_apply(p: dict, x: jnp.ndarray, top_k: int, capacity_factor: float,
-              fcfg: FalconConfig, deterministic_capacity: int | None = None):
-    """x: (B, S, d) -> (y, aux_loss). Token-drop capacity MoE (Switch-style)."""
-    B, S, d = x.shape
-    E = p["router"].shape[1]
-    T = B * S
-    C = deterministic_capacity or max(int(np.ceil(T * top_k / E * capacity_factor)), 8)
-    from repro.parallel.sharding import get_parallel_style
-    mesh = jax.sharding.get_abstract_mesh()
-    nm = dict(mesh.shape).get("model", 1) if (mesh and mesh.axis_names) else 1
-    if nm > 1 and E % nm == 0 and get_parallel_style() == "tp":
-        return _moe_shardmap(p, x, top_k, C, fcfg, mesh)
-    return _moe_dense(p, x, top_k, C, fcfg)
+              fcfg: FalconConfig | None = None,
+              deterministic_capacity: int | None = None):
+    """x: (B, S, d) -> (y, aux_loss). Token-drop capacity MoE (Switch-style).
+
+    Dispatch policy comes from the context config; ``fcfg`` is a deprecated
+    per-call override.
+    """
+    with engine.deprecated_fcfg(fcfg, "moe_apply"):
+        B, S, d = x.shape
+        E = p["router"].shape[1]
+        T = B * S
+        C = deterministic_capacity or max(
+            int(np.ceil(T * top_k / E * capacity_factor)), 8)
+        from repro.parallel.sharding import get_parallel_style
+        mesh = compat.get_abstract_mesh()
+        nm = dict(mesh.shape).get("model", 1) if mesh is not None else 1
+        if nm > 1 and E % nm == 0 and get_parallel_style() == "tp":
+            return _moe_shardmap(p, x, top_k, C, mesh)
+        return _moe_dense(p, x, top_k, C)

@@ -14,6 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 from repro.core.falcon_gemm import FalconConfig, falcon_dense
 from repro.parallel.sharding import BATCH, shard_act
 from .layers import dense_init
@@ -128,12 +129,21 @@ def ssd_init(key, d_model: int, ssm_state: int, n_heads: int, head_dim: int,
     }
 
 
-def ssd_apply(p: dict, x: jnp.ndarray, cfg, fcfg: FalconConfig,
+def ssd_apply(p: dict, x: jnp.ndarray, cfg, fcfg: FalconConfig | None = None,
               state=None, decode: bool = False):
-    """x: (B, L, d_model) -> (y, new_state)."""
+    """x: (B, L, d_model) -> (y, new_state).
+
+    Dispatch policy comes from the context config; ``fcfg`` is a deprecated
+    per-call override.
+    """
+    with engine.deprecated_fcfg(fcfg, "ssd_apply"):
+        return _ssd_apply(p, x, cfg, state=state, decode=decode)
+
+
+def _ssd_apply(p: dict, x: jnp.ndarray, cfg, state=None, decode: bool = False):
     B, L, _ = x.shape
     H, Pd, G, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
-    proj = falcon_dense(x, p["ssm_in"], fcfg)
+    proj = falcon_dense(x, p["ssm_in"])
     d_inner = H * Pd
     z = shard_act(proj[..., :d_inner], BATCH, None, "model")   # gate branch
     off = d_inner
@@ -153,5 +163,5 @@ def ssd_apply(p: dict, x: jnp.ndarray, cfg, fcfg: FalconConfig,
                                 init_state=state)
     y = y + xs * p["ssm_D"][None, None, :, None].astype(x.dtype)
     y = y.reshape(B, L, d_inner) * jax.nn.silu(z)  # mamba2 output gate
-    y = falcon_dense(y, p["ssm_out"], fcfg)
+    y = falcon_dense(y, p["ssm_out"])
     return shard_act(y, BATCH, None, None), new_state

@@ -22,6 +22,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 __all__ = ["ShardingRules", "batch_axes", "param_sharding", "activation_specs",
            "named_sharding", "make_rules"]
 
@@ -167,8 +169,8 @@ def shard_act(x, *spec):
     sentinel resolves per the active parallel style; under "fsdp_only" the
     model axis belongs to batch, so non-batch "model" references are dropped.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    mesh = compat.get_abstract_mesh()
+    if mesh is None:
         return x
     names = set(mesh.axis_names)
     sizes = dict(mesh.shape)

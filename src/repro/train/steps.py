@@ -1,8 +1,10 @@
 """Step functions: train (fwd+bwd+AdamW), eval, prefill, decode.
 
 All steps are pure functions of (params, opt_state, batch, step) so they jit
-and pjit cleanly; the launch layer attaches in/out shardings. The compressed-
-DP variant computes gradients inside ``shard_map`` and replaces the implicit
+and pjit cleanly; the launch layer attaches in/out shardings. FalconGEMM
+policy resolves from the ambient context (``falcon.use``) at trace time; the
+``fcfg`` factory kwarg survives as a deprecated override. The compressed-DP
+variant computes gradients inside ``shard_map`` and replaces the implicit
 GSPMD gradient all-reduce with the int8 collective from
 ``repro.parallel.compression``.
 """
@@ -13,7 +15,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig
+from repro.core import engine
 from repro.models import model as M
 from repro.optim import AdamWConfig, adamw_update, cosine_schedule
 from repro.parallel.compression import compressed_psum_mean
@@ -29,73 +33,87 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
     the global batch is scanned in chunks with an f32 grad accumulator —
     activation memory scales with the microbatch while the optimizer sees the
     full batch (how large global batches ride on fixed per-device memory)."""
+    if fcfg is not None:
+        engine.warn_deprecated_fcfg("make_train_step")
 
     def grad_of(params, batch):
         def loss_fn(p):
-            return M.lm_loss(p, cfg, batch, fcfg)
+            return M.lm_loss(p, cfg, batch)
         return jax.value_and_grad(loss_fn, has_aux=True)(params)
 
     def train_step(params, opt_state, batch, step):
-        if microbatches == 1:
-            (loss, metrics), grads = grad_of(params, batch)
-        else:
-            def split(x):
-                n = microbatches
-                assert x.shape[0] % n == 0, (x.shape, n)
-                return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+        with engine.maybe_use(fcfg):
+            if microbatches == 1:
+                (loss, metrics), grads = grad_of(params, batch)
+            else:
+                def split(x):
+                    n = microbatches
+                    assert x.shape[0] % n == 0, (x.shape, n)
+                    return x.reshape((n, x.shape[0] // n) + x.shape[1:])
 
-            mbatch = {k: split(v) for k, v in batch.items()}
-            gacc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                mbatch = {k: split(v) for k, v in batch.items()}
+                gacc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
-            def body(carry, mb):
-                gacc, lacc = carry
-                (l, _), g = grad_of(params, mb)
-                gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
-                return (gacc, lacc + l), None
+                def body(carry, mb):
+                    gacc, lacc = carry
+                    (l, _), g = grad_of(params, mb)
+                    gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                    return (gacc, lacc + l), None
 
-            (gacc, lsum), _ = jax.lax.scan(
-                body, (gacc0, jnp.zeros((), jnp.float32)), mbatch)
-            grads = jax.tree.map(lambda g: g / microbatches, gacc)
-            loss = lsum / microbatches
-            metrics = {}
-        lr_scale = cosine_schedule(step, warmup, total_steps)
-        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg,
-                                             lr_scale=lr_scale)
-        out = {"loss": loss, "lr_scale": lr_scale, **metrics, **om}
-        return params, opt_state, out
+                (gacc, lsum), _ = jax.lax.scan(
+                    body, (gacc0, jnp.zeros((), jnp.float32)), mbatch)
+                grads = jax.tree.map(lambda g: g / microbatches, gacc)
+                loss = lsum / microbatches
+                metrics = {}
+            lr_scale = cosine_schedule(step, warmup, total_steps)
+            params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg,
+                                                 lr_scale=lr_scale)
+            out = {"loss": loss, "lr_scale": lr_scale, **metrics, **om}
+            return params, opt_state, out
 
     return train_step
 
 
 def make_eval_step(cfg: ModelConfig, fcfg=None):
+    if fcfg is not None:
+        engine.warn_deprecated_fcfg("make_eval_step")
+
     def eval_step(params, batch):
-        loss, metrics = M.lm_loss(params, cfg, batch, fcfg)
-        return {"loss": loss, **metrics}
+        with engine.maybe_use(fcfg):
+            loss, metrics = M.lm_loss(params, cfg, batch)
+            return {"loss": loss, **metrics}
 
     return eval_step
 
 
 def make_prefill_step(cfg: ModelConfig, max_len: int, fcfg=None):
     """Single-pass prefill: fills the KV cache AND returns last-token logits."""
+    if fcfg is not None:
+        engine.warn_deprecated_fcfg("make_prefill_step")
+
     def prefill_step(params, tokens, patch_embeds=None):
-        B = tokens.shape[0]
-        cache = M.init_cache(cfg, B, max_len)
-        logits, cache, _ = M.forward(params, cfg, tokens,
-                                     patch_embeds=patch_embeds, cache=cache,
-                                     cache_index=0, fcfg=fcfg,
-                                     logits_mode="last")
-        return logits, cache
+        with engine.maybe_use(fcfg):
+            B = tokens.shape[0]
+            cache = M.init_cache(cfg, B, max_len)
+            logits, cache, _ = M.forward(params, cfg, tokens,
+                                         patch_embeds=patch_embeds, cache=cache,
+                                         cache_index=0, logits_mode="last")
+            return logits, cache
 
     return prefill_step
 
 
 def make_decode_step(cfg: ModelConfig, fcfg=None):
     """One-token decode against a KV cache at position ``index``."""
+    if fcfg is not None:
+        engine.warn_deprecated_fcfg("make_decode_step")
+
     def decode_step(params, cache, tokens, index):
-        logits, new_cache, _ = M.forward(params, cfg, tokens, cache=cache,
-                                         cache_index=index, fcfg=fcfg,
-                                         logits_mode="last")
-        return logits, new_cache
+        with engine.maybe_use(fcfg):
+            logits, new_cache, _ = M.forward(params, cfg, tokens, cache=cache,
+                                             cache_index=index,
+                                             logits_mode="last")
+            return logits, new_cache
 
     return decode_step
 
@@ -108,32 +126,34 @@ def make_compressed_dp_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh,
     Params replicated, batch sharded over the DP axes; grads are computed
     per-shard inside shard_map and synced with the compressed collective.
     """
-    from jax.experimental.shard_map import shard_map
+    if fcfg is not None:
+        engine.warn_deprecated_fcfg("make_compressed_dp_train_step")
 
     dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
     batch_spec = P(dp_axes)
 
     def sharded_grads(params, batch):
         def loss_fn(p):
-            return M.lm_loss(p, cfg, batch, fcfg)
+            return M.lm_loss(p, cfg, batch)
 
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
         grads = compressed_psum_mean(grads, dp_axes, bits=bits)
         loss = jax.lax.pmean(loss, dp_axes)
         return loss, metrics, grads
 
-    smapped = shard_map(
+    smapped = compat.shard_map(
         sharded_grads, mesh=mesh,
         in_specs=(P(), {"tokens": batch_spec, "labels": batch_spec}),
         out_specs=(P(), P(), P()),
-        check_rep=False,
+        check_vma=False,
     )
 
     def train_step(params, opt_state, batch, step):
-        loss, metrics, grads = smapped(params, batch)
-        lr_scale = cosine_schedule(step, warmup, total_steps)
-        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg,
-                                             lr_scale=lr_scale)
-        return params, opt_state, {"loss": loss, **om}
+        with engine.maybe_use(fcfg):
+            loss, metrics, grads = smapped(params, batch)
+            lr_scale = cosine_schedule(step, warmup, total_steps)
+            params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg,
+                                                 lr_scale=lr_scale)
+            return params, opt_state, {"loss": loss, **om}
 
     return train_step

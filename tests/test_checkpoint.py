@@ -80,13 +80,14 @@ def test_elastic_reshard_on_restore(tmp_path):
     out = run_multidevice(f"""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
         from repro.checkpoint import save_checkpoint, restore_checkpoint
         t = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
-        mesh1 = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh1 = compat.make_mesh((8,), ("data",))
         t1 = jax.device_put(t, {{"w": NamedSharding(mesh1, P("data", None))}})
         save_checkpoint(r"{tmp_path}", 3, t1)
         # "new cluster": 4x2 mesh, different layout
-        mesh2 = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh2 = compat.make_mesh((4, 2), ("data", "model"))
         sh2 = {{"w": NamedSharding(mesh2, P("model", "data"))}}
         got, step, _ = restore_checkpoint(r"{tmp_path}", t, shardings=sh2)
         assert step == 3

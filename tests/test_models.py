@@ -51,8 +51,7 @@ def test_decode_matches_full_forward(arch, rng):
 
     # full forward logits at every position
     hidden, _, _ = M.forward(params, cfg, tokens, logits_mode="none")
-    full_logits = M.compute_logits(params, cfg, hidden,
-                                   M.falcon_config_for(cfg))
+    full_logits = M.compute_logits(params, cfg, hidden)
 
     # prefill on the first S-1 tokens, then decode token S-1
     cache = M.init_cache(cfg, B, S + 4)

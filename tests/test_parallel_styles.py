@@ -8,6 +8,7 @@ def test_fsdp_only_matches_tp_numerics():
     """Same params, same batch: tp and fsdp_only styles must agree."""
     out = run_multidevice("""
         import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.configs import registry
         from repro.models import model as M
         from repro.parallel import sharding as SH
@@ -15,13 +16,12 @@ def test_fsdp_only_matches_tp_numerics():
         params = M.init_params(cfg, jax.random.PRNGKey(0))
         toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab_size)
         batch = {"tokens": toks, "labels": toks}
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         losses = {}
         for style in ("tp", "fsdp_only"):
             c2 = dataclasses.replace(cfg, parallel_style=style)
             tok = SH.set_parallel_style(style)
-            with jax.sharding.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 rules = SH.make_rules(mesh, fsdp=True, style=style)
                 psh = SH.param_sharding(params, mesh, rules)
                 p2 = jax.device_put(params, psh)

@@ -33,17 +33,17 @@ def test_shard_act_identity_without_mesh():
 def test_moe_shardmap_equals_dense():
     out = run_multidevice("""
         import jax, jax.numpy as jnp, numpy as np
+        import repro.api as falcon
+        from repro import compat
         from repro.models import moe as MOE
-        from repro.core.falcon_gemm import FalconConfig
         p = MOE.moe_init(jax.random.PRNGKey(0), 32, 64, 8, jnp.float32)
         x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
-        fcfg = FalconConfig(enabled=False)
-        y0, _ = MOE._moe_dense(p, x, 2, 256, fcfg)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.sharding.set_mesh(mesh):
-            y1, _ = jax.jit(lambda p_, x_: MOE.moe_apply(
-                p_, x_, 2, 1.25, fcfg, deterministic_capacity=256))(p, x)
+        with falcon.use(falcon.FalconConfig(enabled=False)):
+            y0, _ = MOE._moe_dense(p, x, 2, 256)
+            mesh = compat.make_mesh((4, 2), ("data", "model"))
+            with compat.set_mesh(mesh):
+                y1, _ = jax.jit(lambda p_, x_: MOE.moe_apply(
+                    p_, x_, 2, 1.25, deterministic_capacity=256))(p, x)
         err = float(jnp.max(jnp.abs(y0 - y1)))
         assert err < 1e-5, err
         print("MOE_OK", err)
@@ -55,16 +55,17 @@ def test_compressed_psum_accuracy_and_train_step():
     out = run_multidevice("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.parallel.compression import compressed_psum_mean, psum_mean
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ("data",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 128)) * 0.01
 
         def body(gl):
             exact = psum_mean({"g": gl}, ("data",))["g"]
             comp = compressed_psum_mean({"g": gl}, ("data",))["g"]
             return exact, comp
-        with jax.sharding.set_mesh(mesh):
-            exact, comp = jax.jit(jax.shard_map(
+        with compat.set_mesh(mesh):
+            exact, comp = jax.jit(compat.shard_map(
                 body, in_specs=P("data", None),
                 out_specs=(P(None, None), P(None, None)), check_vma=False))(g)
         rel = float(jnp.linalg.norm(exact - comp) / jnp.linalg.norm(exact))
@@ -83,13 +84,16 @@ def test_compressed_psum_accuracy_and_train_step():
         ost = adamw_init(params, oc)
         data = SyntheticLMData(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
                                           global_batch=8))
-        step = jax.jit(make_compressed_dp_train_step(cfg, oc, mesh))
-        with jax.sharding.set_mesh(mesh):
+        # warmup=1: the default 100-step warmup leaves lr_scale ~0 over a
+        # short smoke run, reducing the "learns" assertion to batch noise.
+        step = jax.jit(make_compressed_dp_train_step(cfg, oc, mesh, warmup=1))
+        batch = data.batch(0)  # fixed batch: loss must drop deterministically
+        with compat.set_mesh(mesh):
             losses = []
             for s in range(8):
-                params, ost, m = step(params, ost, data.batch(s), s)
+                params, ost, m = step(params, ost, batch, s)
                 losses.append(float(m["loss"]))
-        assert losses[-1] < losses[0], losses
+        assert losses[-1] < losses[0] - 0.05, losses
         print("CDP_OK", round(losses[0], 3), round(losses[-1], 3))
     """, timeout=420)
     assert "COMP_OK" in out and "CDP_OK" in out
@@ -98,11 +102,11 @@ def test_compressed_psum_accuracy_and_train_step():
 def test_param_sharding_rules_on_mesh():
     out = run_multidevice("""
         import jax, numpy as np
+        from repro import compat
         from repro.configs import registry
         from repro.models import model as M
         from repro.parallel import sharding as SH
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         cfg = registry.smoke_config("dbrx_132b")
         sds = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
         rules = SH.make_rules(mesh, fsdp=True)
