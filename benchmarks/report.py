@@ -1,9 +1,33 @@
-"""Render EXPERIMENTS.md tables from the dry-run JSON records."""
+"""Benchmark reporting: EXPERIMENTS.md tables + the machine-readable report.
+
+Two surfaces:
+
+* ``python -m benchmarks.report`` (default) — render EXPERIMENTS.md tables
+  from the dry-run JSON records, as before.
+* the **machine-readable path** — :func:`to_metrics` / :func:`write_json`
+  flatten section results from :mod:`benchmarks.run` into a flat
+  ``{metric_name: {value, unit, higher_is_better}}`` report (tokens/s,
+  GFLOPS, hit rates, error norms), and ``--check NEW --baseline BASE``
+  exits non-zero when any baseline metric regressed by more than its
+  tolerance (default 20%) — the CI ``bench-smoke`` gate:
+
+      python -m benchmarks.run --quick --json BENCH_3.json
+      python -m benchmarks.report --check BENCH_3.json \\
+          --baseline benchmarks/baseline_cpu.json
+
+  Wall-clock metrics carry wider per-metric ``tolerance`` values in the
+  committed baseline (CPU timing noise across CI hosts); ratios and rates
+  use the default.
+"""
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+
+REPORT_VERSION = 1
+DEFAULT_TOLERANCE = 0.20
 
 ARCH_ORDER = ["hymba_1_5b", "gemma3_27b", "granite_3_2b", "starcoder2_15b",
               "mistral_nemo_12b", "kimi_k2_1t", "dbrx_132b", "mamba2_370m",
@@ -68,7 +92,138 @@ def roofline_table(recs, mesh="single"):
     return "\n".join(lines)
 
 
-def main():
+# ---------------------------------------------------------------------------
+# Machine-readable benchmark report (CI bench-smoke artifact + gate)
+# ---------------------------------------------------------------------------
+
+def _metric(value, unit, higher_is_better=True):
+    return {"value": float(value), "unit": unit,
+            "higher_is_better": bool(higher_is_better)}
+
+
+def to_metrics(results: dict) -> dict:
+    """Flatten ``benchmarks.run`` section results into named metrics.
+
+    Only sections present in ``results`` contribute (a failed section is
+    simply absent — the regression check then flags its missing baseline
+    metrics). Names are stable: ``<section>.<quantity>[_qualifier]``.
+    """
+    m: dict[str, dict] = {}
+    for r in results.get("operator_level") or []:
+        key = f"M{r['M']}_N{r['N']}_K{r['K']}"
+        m[f"operator_level.falcon_gflops_{key}"] = _metric(r["falcon_gflops"], "GFLOPS")
+        m[f"operator_level.meas_speedup_{key}"] = _metric(r["meas_speedup"], "x")
+    for r in results.get("e2e_llm") or []:
+        m[f"e2e_llm.speedup_S{r['S']}"] = _metric(r["speedup"], "x")
+        m[f"e2e_llm.lcma_layer_frac_S{r['S']}"] = _metric(r["lcma_layer_frac"], "frac")
+    for r in results.get("stepwise") or []:
+        m[f"stepwise.alg2_gflops_n{r['n']}"] = _metric(r["alg2_gflops"], "GFLOPS")
+        m[f"stepwise.alg2_over_alg1_n{r['n']}"] = _metric(
+            r["alg2_gflops"] / max(r["alg1_gflops"], 1e-9), "x")
+    rows = results.get("roofline_fig8") or []
+    if rows:
+        m["roofline_fig8.best_decision_tflops"] = _metric(
+            max(r["decision_tflops"] for r in rows), "TFLOPS")
+    pc = results.get("plan_cache") or {}
+    st = pc.get("cache_stats") if isinstance(pc, dict) else None
+    if st:
+        m["plan_cache.hit_rate"] = _metric(st["hit_rate"], "frac")
+    if isinstance(pc, dict) and pc.get("amortization"):
+        am = pc["amortization"]
+        cold = sum(r["cold_us"] for r in am)
+        warm = sum(r["warm_us"] for r in am)
+        m["plan_cache.amortization_x"] = _metric(cold / max(warm, 1e-9), "x")
+    if isinstance(pc, dict) and pc.get("quality"):
+        cal = [r for r in pc["quality"] if r["profile"] == "calibrated"]
+        if cal:
+            m["plan_cache.calibrated_accuracy"] = _metric(
+                sum(r["correct"] for r in cal) / len(cal), "frac")
+    for r in results.get("serve") or []:
+        m["serve.tokens_per_s"] = _metric(r["tokens_per_s"], "tok/s")
+        m["serve.decode_tokens_per_s"] = _metric(r["decode_tokens_per_s"], "tok/s")
+        m["serve.bucket_hit_rate"] = _metric(r["bucket_hit_rate"], "frac")
+        m["serve.padding_waste"] = _metric(r["padding_waste"], "frac",
+                                           higher_is_better=False)
+        m["serve.plan_cache_hit_rate"] = _metric(r["plan_cache_hit_rate"], "frac")
+    for r in results.get("precision") or []:
+        m[f"precision.fused_rel_err_{r['algo']}_n{r['n']}"] = _metric(
+            r["fused_rel_err"], "rel_err", higher_is_better=False)
+    return m
+
+
+def write_json(results: dict, path: str, quick: bool = False,
+               failures: list[str] | None = None) -> str:
+    doc = {
+        "version": REPORT_VERSION,
+        "quick": bool(quick),
+        "failures": list(failures or []),
+        "metrics": to_metrics(results),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    return path
+
+
+def check_regressions(new: dict, baseline: dict,
+                      default_tolerance: float = DEFAULT_TOLERANCE) -> list[str]:
+    """Compare a new report against a committed baseline.
+
+    Every baseline metric must exist in the new report and sit within its
+    tolerance band on the bad side (better-than-baseline never fails).
+    Returns human-readable failure strings; empty means green.
+    """
+    problems: list[str] = []
+    if new.get("failures"):
+        problems.append(f"benchmark sections failed: {new['failures']}")
+    new_metrics = new.get("metrics", {})
+    for name, base in sorted(baseline.get("metrics", {}).items()):
+        got = new_metrics.get(name)
+        if got is None:
+            problems.append(f"{name}: missing from new report "
+                            f"(baseline {base['value']:g})")
+            continue
+        tol = float(base.get("tolerance", default_tolerance))
+        bval, nval = float(base["value"]), float(got["value"])
+        if base.get("higher_is_better", True):
+            floor = bval * (1.0 - tol)
+            if nval < floor:
+                problems.append(f"{name}: {nval:g} < {floor:g} "
+                                f"(baseline {bval:g} - {tol:.0%})")
+        else:
+            ceil = bval * (1.0 + tol)
+            if nval > ceil:
+                problems.append(f"{name}: {nval:g} > {ceil:g} "
+                                f"(baseline {bval:g} + {tol:.0%})")
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", default=None, metavar="NEW_JSON",
+                    help="machine-readable report to gate (benchmarks.run --json)")
+    ap.add_argument("--baseline", default=None, metavar="BASE_JSON",
+                    help="committed baseline to compare against")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="default allowed regression fraction (default 0.2)")
+    args = ap.parse_args(argv)
+
+    if args.check:
+        if not args.baseline:
+            ap.error("--check requires --baseline")
+        with open(args.check) as f:
+            new = json.load(f)
+        with open(args.baseline) as f:
+            base = json.load(f)
+        problems = check_regressions(new, base, default_tolerance=args.tolerance)
+        n = len(base.get("metrics", {}))
+        if problems:
+            print(f"REGRESSIONS ({len(problems)} of {n} gated metrics):")
+            for p in problems:
+                print(f"  - {p}")
+            return 1
+        print(f"benchmark gate green: {n} baseline metrics within tolerance")
+        return 0
+
     recs = load()
     print("## Dry-run (single-pod 16x16)\n")
     print(dryrun_table(recs, "single"))
@@ -76,7 +231,8 @@ def main():
     print(dryrun_table(recs, "multi"))
     print("\n## Roofline (single-pod, analytic)\n")
     print(roofline_table(recs, "single"))
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -1,57 +1,89 @@
 """Benchmark driver — one function per paper table/figure.
 
-Prints ``name,...`` CSV lines per benchmark plus a summary. Run:
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+Prints ``name,...`` CSV lines per benchmark plus a summary. Each section is
+failure-isolated: an exception mid-benchmark is reported for that section,
+the remaining sections still run, and the process exits non-zero — CI can no
+longer go green on a benchmark that silently died mid-run. Run:
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json BENCH.json]
+
+``--json`` writes the machine-readable per-benchmark report (tokens/s,
+GFLOPS, rates) via :mod:`benchmarks.report`, the file CI uploads and gates
+regressions on.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+import traceback
 
 
-def main() -> None:
+def _sections(quick: bool):
+    from . import (e2e_llm, operator_level, plan_cache, precision,
+                   roofline_fig8, serve_bench, stepwise)
+
+    return [
+        ("operator_level",
+         "Fig.5 operator-level effective GFLOPS (CPU measured + v5e modeled)",
+         lambda: operator_level.run(ms=(512, 1024) if quick else (512, 1024, 2048),
+                                    max_shapes=2 if quick else 3)),
+        ("e2e_llm",
+         "Fig.6 end-to-end LLM prefill with FalconGEMM backend",
+         lambda: e2e_llm.run(seqs=(128, 256) if quick else (128, 256, 512))),
+        ("stepwise",
+         "Fig.7 step-wise Execution Module evaluation",
+         lambda: stepwise.run(sizes=(512, 1024) if quick else (512, 1024, 2048))),
+        ("roofline_fig8",
+         "Fig.8 roofline + Decision Module selection (v5e model)",
+         lambda: roofline_fig8.run()),
+        ("plan_cache",
+         "Plan cache amortization + autotuned decision quality",
+         lambda: plan_cache.run(sizes=(512, 1024) if quick else (512, 1024, 2048))),
+        ("serve",
+         "Continuous-batching serve engine (bucketed plan reuse)",
+         lambda: serve_bench.run(requests=8 if quick else 16,
+                                 max_prompt_len=16 if quick else 32,
+                                 max_new_tokens=4 if quick else 8)),
+        ("precision",
+         "IV-F numerical precision: fused vs downcast-H",
+         lambda: precision.run(sizes=(64, 128) if quick else (64, 128, 256))),
+    ]
+
+
+def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    args = ap.parse_args()
-
-    from . import (e2e_llm, operator_level, plan_cache, precision,
-                   roofline_fig8, stepwise)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the machine-readable benchmark report "
+                         "(benchmarks.report schema) to PATH")
+    args = ap.parse_args(argv)
 
     t0 = time.time()
-    print("=" * 72)
-    print("Fig.5 operator-level effective GFLOPS (CPU measured + v5e modeled)")
-    print("=" * 72)
-    operator_level.run(ms=(512, 1024) if args.quick else (512, 1024, 2048),
-                       max_shapes=2 if args.quick else 3)
-
-    print("\n" + "=" * 72)
-    print("Fig.6 end-to-end LLM prefill with FalconGEMM backend")
-    print("=" * 72)
-    e2e_llm.run(seqs=(128, 256) if args.quick else (128, 256, 512))
-
-    print("\n" + "=" * 72)
-    print("Fig.7 step-wise Execution Module evaluation")
-    print("=" * 72)
-    stepwise.run(sizes=(512, 1024) if args.quick else (512, 1024, 2048))
-
-    print("\n" + "=" * 72)
-    print("Fig.8 roofline + Decision Module selection (v5e model)")
-    print("=" * 72)
-    roofline_fig8.run()
-
-    print("\n" + "=" * 72)
-    print("Plan cache amortization + autotuned decision quality")
-    print("=" * 72)
-    plan_cache.run(sizes=(512, 1024) if args.quick else (512, 1024, 2048))
-
-    print("\n" + "=" * 72)
-    print("IV-F numerical precision: fused vs downcast-H")
-    print("=" * 72)
-    precision.run(sizes=(64, 128) if args.quick else (64, 128, 256))
+    results: dict[str, object] = {}
+    failures: list[str] = []
+    for name, title, fn in _sections(args.quick):
+        print(("\n" if results or failures else "") + "=" * 72)
+        print(title)
+        print("=" * 72)
+        try:
+            results[name] = fn()
+        except Exception:
+            failures.append(name)
+            print(f"\nFAILED section {name!r}:", file=sys.stderr)
+            traceback.print_exc()
 
     _dryrun_summary()
-    print(f"\nall benchmarks done in {time.time() - t0:.0f}s")
+
+    if args.json:
+        from . import report
+        path = report.write_json(results, args.json, quick=args.quick,
+                                 failures=failures)
+        print(f"\nwrote machine-readable report -> {path}")
+
+    status = "with FAILURES in " + ", ".join(failures) if failures else "OK"
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s [{status}]")
+    return 1 if failures else 0
 
 
 def _dryrun_summary(out_dir: str = "artifacts/dryrun", perf_dir: str = "artifacts/perf"):
@@ -86,4 +118,4 @@ def _dryrun_summary(out_dir: str = "artifacts/dryrun", perf_dir: str = "artifact
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

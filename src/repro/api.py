@@ -25,7 +25,8 @@ from repro.core.backends import (Backend, available_backends, get_backend,
                                  register_backend, unregister_backend)
 from repro.core.engine import (FalconEngine, PlannedWeight, active_config,
                                current_config, dense, dot_general, einsum,
-                               matmul, plan_weight, precombine_params, use)
+                               matmul, plan_weight, precombine_params,
+                               projection_shapes, use, warm_buckets)
 from repro.core.falcon_gemm import (FalconConfig, falcon_dense, falcon_matmul,
                                     matmul_with_precombined, plan,
                                     precombine_weights)
@@ -38,6 +39,8 @@ __all__ = [
     # precombined weights (offline Combine B)
     "PlannedWeight", "plan_weight", "precombine_params",
     "precombine_weights", "matmul_with_precombined",
+    # bucket pre-planning (continuous-batching serve path)
+    "warm_buckets", "projection_shapes",
     # backend registry
     "Backend", "register_backend", "unregister_backend", "get_backend",
     "available_backends",

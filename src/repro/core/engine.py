@@ -40,7 +40,7 @@ from .lcma import LCMA
 __all__ = ["use", "current_config", "active_config", "maybe_use",
            "config_scope", "matmul", "dense", "dot_general", "einsum",
            "PlannedWeight", "plan_weight", "precombine_params",
-           "FalconEngine"]
+           "projection_shapes", "warm_buckets", "FalconEngine"]
 
 
 # ---------------------------------------------------------------------------
@@ -278,6 +278,62 @@ def _apply_planned(x: jnp.ndarray, pw: PlannedWeight,
     else:  # backend has no native precombined path: generated jnp combines
         out2 = matmul_with_precombined(x2, pw.bt, pw.lcma, pw.n, cfg)
     return out2.reshape(*lead, pw.n)
+
+
+# ---------------------------------------------------------------------------
+# Bucket pre-planning (continuous-batching serve path)
+# ---------------------------------------------------------------------------
+
+def projection_shapes(arch) -> list[tuple[int, int]]:
+    """The (K, N) dense-projection shapes a decoder ``arch`` dispatches.
+
+    Duck-typed on :class:`~repro.configs.base.ModelConfig` fields so the core
+    layer stays import-free of the config zoo. Covers attention projections,
+    the MLP (swiglu or gelu), SSM in/out where present, and the (padded)
+    LM head — the same set ``precombine_params`` lifts.
+    """
+    d = int(arch.d_model)
+    shapes: list[tuple[int, int]] = []
+    H = int(getattr(arch, "num_heads", 0))
+    if H:
+        hd = int(arch.resolved_head_dim)
+        Hkv = int(getattr(arch, "num_kv_heads", H))
+        shapes += [(d, H * hd), (d, Hkv * hd), (H * hd, d)]
+    ff = int(getattr(arch, "d_ff", 0))
+    if ff:
+        shapes += [(d, ff), (ff, d)]
+    sh = int(getattr(arch, "ssm_heads", 0))
+    if sh:
+        d_inner = sh * int(getattr(arch, "ssm_head_dim", 64))
+        gn = int(getattr(arch, "ssm_groups", 1)) * int(getattr(arch, "ssm_state", 0))
+        shapes += [(d, 2 * d_inner + 2 * gn + sh), (d_inner, d)]
+    V = int(getattr(arch, "vocab_size", 0))
+    if V:
+        shapes.append((d, -(-V // 256) * 256))   # padded vocab (models.padded_vocab)
+    seen: set[tuple[int, int]] = set()
+    return [s for s in shapes if not (s in seen or seen.add(s))]
+
+
+def warm_buckets(cfg: FalconConfig | None, arch, buckets,
+                 dtype: str | None = None) -> int:
+    """Pre-plan every projection of ``arch`` at every bucketed M.
+
+    The continuous-batching scheduler only ever launches bucket shapes, so
+    running the Decision Module once per (bucket M) x (projection K, N) —
+    both the plain and the precombined-B profitability variants — means
+    serve-time traces are pure plan-cache hits. Returns the number of
+    ``plan()`` calls issued. ``buckets`` are activation-row counts
+    (batch x padded-seq for prefill buckets, batch for decode buckets).
+    """
+    cfg = _resolve(cfg)
+    dtype = dtype or str(getattr(arch, "dtype", "bfloat16"))
+    n = 0
+    for M in sorted(set(int(b) for b in buckets)):
+        for (K, N) in projection_shapes(arch):
+            plan(M, K, N, cfg, dtype)
+            plan(M, K, N, cfg, dtype, precombined_b=True)
+            n += 2
+    return n
 
 
 # ---------------------------------------------------------------------------

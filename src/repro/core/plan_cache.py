@@ -21,12 +21,19 @@ re-derivable); in-memory hits return the original ``Decision`` untouched.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import hashlib
 import json
 import logging
 import os
 import threading
+import time
+
+try:                      # POSIX advisory locks guard cross-process writes
+    import fcntl
+except ImportError:       # pragma: no cover - non-POSIX fallback
+    fcntl = None
 
 from . import algorithms
 from . import decision as dec
@@ -91,6 +98,42 @@ def plan_key(M: int, K: int, N: int, hw: HardwareProfile, dtype: str, *,
         f"mode={mode}", f"fused={int(fused)}", f"pre={int(precombined_b)}",
         f"ms={min_speedup:g}", cands,
     ])
+
+
+@contextlib.contextmanager
+def _file_lock(lock_path: str, timeout: float = 10.0):
+    """Advisory inter-process lock around cache-file writes.
+
+    ``flock`` is taken on a sidecar ``.lock`` file (never on the cache file
+    itself — ``os.replace`` swaps that inode out from under any holder).
+    flock contends between distinct fds, so it also serializes writer threads
+    that each own their own :class:`PlanCache` on the same path. On timeout
+    the writer proceeds unlocked with a warning — a stale or wedged lock
+    holder must never take down the serving process; merge-on-save plus the
+    atomic rename keeps even that race loss-bounded (one writer's fresh
+    entries) rather than corrupting.
+    """
+    fd = os.open(lock_path, os.O_CREAT | os.O_RDWR, 0o644)
+    locked = False
+    try:
+        if fcntl is not None:
+            deadline = time.monotonic() + timeout
+            while True:
+                try:
+                    fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+                    locked = True
+                    break
+                except OSError:
+                    if time.monotonic() >= deadline:
+                        log.warning("plan cache lock %s: timeout after %.1fs; "
+                                    "writing unlocked", lock_path, timeout)
+                        break
+                    time.sleep(0.01)
+        yield
+    finally:
+        if locked:
+            fcntl.flock(fd, fcntl.LOCK_UN)
+        os.close(fd)
 
 
 def _encode(d: dec.Decision) -> dict:
@@ -167,20 +210,43 @@ class PlanCache:
 
     # -- persistence --------------------------------------------------------
 
-    def save(self, path: str | None = None) -> str:
+    def save(self, path: str | None = None, merge: bool = True) -> str:
+        """Persist the cache: file lock -> merge on-disk entries -> atomic rename.
+
+        Safe against concurrent writers (threads with their own caches, or
+        separate serving processes sharing one warmed file): the sidecar lock
+        serializes the read-merge-write, ``merge=True`` folds in entries some
+        other writer landed since we loaded (our in-memory decisions win on
+        key conflicts — they are newest), and the per-writer temp file +
+        ``os.replace`` keeps readers from ever seeing a torn file.
+        """
         path = path or self.path
         if path is None:
             raise ValueError("PlanCache.save: no path configured")
-        with self._lock:
-            doc = {
-                "version": _FORMAT_VERSION,
-                "entries": [[k, _encode(d)] for k, d in self._entries.items()],
-            }
-        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(doc, f, indent=1)
-        os.replace(tmp, path)
+        apath = os.path.abspath(path)
+        os.makedirs(os.path.dirname(apath), exist_ok=True)
+        with _file_lock(apath + ".lock"):
+            merged: list[tuple[str, dict]] = []
+            if merge and os.path.exists(apath):
+                try:
+                    with open(apath) as f:
+                        doc = json.load(f)
+                    if doc.get("version") == _FORMAT_VERSION:
+                        with self._lock:
+                            merged = [(k, p) for k, p in doc.get("entries", [])
+                                      if k not in self._entries]
+                except (OSError, ValueError) as e:
+                    log.warning("plan cache %s unreadable during save (%s); "
+                                "overwriting", apath, e)
+            with self._lock:
+                entries = merged + [[k, _encode(d)]
+                                    for k, d in self._entries.items()]
+            doc = {"version": _FORMAT_VERSION, "entries": entries}
+            # unique temp per writer: two unlocked writers must not share one
+            tmp = f"{apath}.tmp.{os.getpid()}.{threading.get_ident()}"
+            with open(tmp, "w") as f:
+                json.dump(doc, f, indent=1)
+            os.replace(tmp, apath)
         return path
 
     def load(self, path: str | None = None) -> int:

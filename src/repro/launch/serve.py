@@ -1,13 +1,19 @@
-"""Serving launcher: batched prefill + decode with the FalconGEMM backend.
+"""Serving launcher: a thin CLI over the serving engines.
 
-``python -m repro.launch.serve --arch granite_3_2b --batch 4 --prompt-len 64
---gen 32`` runs prefill over a token batch and auto-regressive decode. The
-FalconGEMM policy is installed once with ``falcon.use`` (context-scoped
-config); static weights are lifted to ``PlannedWeight``s — the paper §IV-C
-"offline Combine B": for every projection where the Decision Module selects
-an LCMA, B̃ is combined once at load time and serving pays only
-Combine A + the fused GEMM/Combine-H (``--no-precombine`` opts out). All
-planning runs through the persistent plan cache (``--plan-cache``).
+Two modes share the FalconGEMM serving stack (context-scoped config, offline
+Combine B via ``PlannedWeight``, persistent plan cache):
+
+* ``--continuous`` — the continuous-batching :class:`repro.serve.ServeEngine`:
+  ``--requests N`` synthetic requests with ragged prompt lengths are admitted
+  through bucketed prefill micro-batches and decoded with per-slot positions;
+  the engine pre-plans and pre-compiles the whole bucket grid (``--no-warm``
+  opts out) and prints the ``ServeStats`` surface (tokens/s, bucket hit rate,
+  plan-cache hit rate, padding waste). See ``docs/serving.md``.
+
+* default — the original one-shot batched prefill + autoregressive decode
+  (every row advances in lockstep), kept for benchmarks and smoke tests.
+
+``python -m repro.launch.serve --arch granite_3_2b --continuous --requests 32``
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ from repro.configs import get_config, smoke_config
 from repro.core import plan_cache
 from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
+from repro.serve import ServeEngine, StepLoop
 from repro.train.steps import make_decode_step, make_prefill_step
 
 
@@ -44,6 +51,20 @@ def main() -> None:
                     help="persistent Decision plan cache (JSON, written by "
                          "repro.tools.tune); loaded before tracing and "
                          "flushed back on exit")
+    # continuous-batching engine
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve --requests jobs through the continuous-"
+                         "batching engine instead of one lockstep batch")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="number of synthetic requests (--continuous)")
+    ap.add_argument("--max-slots", type=int, default=8,
+                    help="concurrent decode slots (--continuous)")
+    ap.add_argument("--min-prompt-len", type=int, default=4,
+                    help="ragged prompt lower bound (--continuous)")
+    ap.add_argument("--warm", action="store_true", default=True,
+                    help="pre-plan + pre-compile the bucket grid before "
+                         "serving (--continuous)")
+    ap.add_argument("--no-warm", dest="warm", action="store_false")
     args = ap.parse_args()
 
     if args.plan_cache:
@@ -51,6 +72,53 @@ def main() -> None:
         print(f"plan cache: {len(cache)} plans loaded from {args.plan_cache}")
 
     cfg = smoke_config(args.arch) if args.reduced else get_config(args.arch)
+    if args.continuous:
+        _run_continuous(cfg, args)
+    else:
+        _run_oneshot(cfg, args)
+    if args.plan_cache:
+        plan_cache.flush()
+
+
+def _run_continuous(cfg, args) -> None:
+    engine = ServeEngine(
+        cfg, max_slots=args.max_slots, max_prompt_len=args.prompt_len,
+        max_new_tokens=args.gen, precombine=args.precombine, seed=args.seed)
+    print(f"engine: {args.max_slots} slots, cache len {engine.max_len}, "
+          f"{engine.n_precombined} weight tensor(s) precombined, buckets "
+          f"seq={list(engine.policy.prefill_seq)} "
+          f"prefill_batch={list(engine.policy.prefill_batch)} "
+          f"decode_batch={list(engine.policy.decode_batch)}")
+    if args.warm:
+        w = engine.warm()
+        print(f"warmup: {w['plans']} Decision plans, {w['shapes']} step "
+              f"shapes compiled in {w['seconds']:.1f}s")
+    rng = np.random.default_rng(args.seed)
+    lo = min(args.min_prompt_len, args.prompt_len)
+    for _ in range(args.requests):
+        plen = int(rng.integers(lo, args.prompt_len + 1))
+        engine.submit(rng.integers(0, cfg.vocab_size, plen),
+                      max_new_tokens=int(rng.integers(1, args.gen + 1)))
+    t0 = time.perf_counter()
+    done = StepLoop(engine).run_until_idle()
+    wall = time.perf_counter() - t0
+    s = engine.summary()
+    print(f"served {len(done)}/{args.requests} requests in {wall:.2f}s: "
+          f"{s['prompt_tokens']} prompt + {s['generated_tokens']} generated "
+          f"tokens ({s['tokens_per_s']:.1f} tok/s real, "
+          f"{s['decode_tokens_per_s']:.1f} decode tok/s)")
+    print(f"steps: {s['prefill_steps']} prefill + {s['decode_steps']} decode | "
+          f"bucket hit rate {s['bucket_hit_rate']:.1%} | "
+          f"padding waste {s['padding_waste']:.1%}")
+    pc = s["plan_cache"]
+    print(f"plan cache: {pc['hits']} hits / {pc['misses']} misses "
+          f"({pc['hit_rate']:.0%} hit rate, {pc['entries']} plans)")
+    if done:
+        sample = done[0]
+        print(f"sample (rid={sample.rid}): {sample.generated[:16]}")
+
+
+def _run_oneshot(cfg, args) -> None:
     mesh = make_local_mesh()
     fcfg = M.falcon_config_for(cfg, dict(mesh.shape))
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -106,8 +174,6 @@ def main() -> None:
     st = plan_cache.stats()
     print(f"plan cache: {st.hits} hits / {st.misses} misses "
           f"({st.hit_rate:.0%} hit rate, {len(plan_cache.default_cache())} plans)")
-    if args.plan_cache:
-        plan_cache.flush()
 
 
 if __name__ == "__main__":

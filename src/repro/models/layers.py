@@ -68,7 +68,8 @@ def _mask(qpos, kpos, window):
     return causal & in_window
 
 
-def attention_scores(q, k, v, qpos, kpos, window, kv_valid=None):
+def attention_scores(q, k, v, qpos, kpos, window, kv_valid=None,
+                     ragged: bool = False):
     """Direct attention. q: (B,Sq,H,hd) k,v: (B,Sk,Hkv,hd) -> (B,Sq,H,hd).
 
     GQA is realized by repeating K/V up to H heads rather than grouping Q
@@ -76,6 +77,11 @@ def attention_scores(q, k, v, qpos, kpos, window, kv_valid=None):
     survives (grouping H -> (Hkv, rep) with Hkv < model-parallelism would
     force XLA to replicate the (B,H,Sq,Sk) score tensor — catastrophic at
     32k context).
+
+    ``ragged=True`` builds the mask per batch row (positions differ across
+    the batch — continuous-batching decode where every slot sits at its own
+    offset). The uniform path keeps the (Sq, Sk) mask so 32k-context cells
+    never materialize a per-batch mask they don't need.
     """
     B, Sq, H, hd = q.shape
     Hkv = k.shape[2]
@@ -85,16 +91,22 @@ def attention_scores(q, k, v, qpos, kpos, window, kv_valid=None):
         v = jnp.repeat(v, rep, axis=2)
     logits = engine.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
     logits *= 1.0 / np.sqrt(hd)
-    m = _mask(qpos[0], kpos[0], window)  # positions identical across batch
-    if kv_valid is not None:
-        m = m & kv_valid[0][None, :]
-    logits = jnp.where(m[None, None], logits, NEG_INF)
+    if ragged:
+        m = jax.vmap(lambda qp, kp: _mask(qp, kp, window))(qpos, kpos)
+        if kv_valid is not None:
+            m = m & kv_valid[:, None, :]
+        logits = jnp.where(m[:, None], logits, NEG_INF)
+    else:
+        m = _mask(qpos[0], kpos[0], window)  # positions identical across batch
+        if kv_valid is not None:
+            m = m & kv_valid[0][None, :]
+        logits = jnp.where(m[None, None], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     return engine.einsum("bhqk,bkhd->bqhd", p, v)
 
 
 def flash_attention(q, k, v, qpos, kpos, window, kv_valid=None,
-                    q_chunk: int = 512):
+                    q_chunk: int = 512, ragged: bool = False):
     """Memory-bounded attention: scan over query chunks.
 
     Keeps the score tensor at (B, H, q_chunk, Sk) — required to compile the
@@ -102,7 +114,8 @@ def flash_attention(q, k, v, qpos, kpos, window, kv_valid=None,
     """
     B, Sq, H, hd = q.shape
     if Sq <= q_chunk:
-        return attention_scores(q, k, v, qpos, kpos, window, kv_valid=kv_valid)
+        return attention_scores(q, k, v, qpos, kpos, window, kv_valid=kv_valid,
+                                ragged=ragged)
     assert Sq % q_chunk == 0, (Sq, q_chunk)
     nc = Sq // q_chunk
     qc = q.reshape(B, nc, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
@@ -110,7 +123,8 @@ def flash_attention(q, k, v, qpos, kpos, window, kv_valid=None,
 
     @jax.checkpoint  # never store the (B,H,qc,Sk) score tensor for bwd
     def chunk_attn(qi, pi, kk, vv):
-        return attention_scores(qi, kk, vv, pi, kpos, window, kv_valid=kv_valid)
+        return attention_scores(qi, kk, vv, pi, kpos, window, kv_valid=kv_valid,
+                                ragged=ragged)
 
     def body(carry, xs):
         qi, pi = xs
@@ -148,6 +162,11 @@ def attn_apply(p: dict, x: jnp.ndarray, dims: AttnDims, positions, theta: float,
     decode: cache={'k','v'} (B, S_max, Hkv, hd); x is (B, 1, d) at
     ``cache_index``; returns (out, new_cache).
 
+    ``cache_index`` may be a scalar (all rows at the same offset — the
+    one-shot serve path) or a (B,) vector of per-row offsets (continuous
+    batching: each slot decodes at its own position; K/V writes, validity
+    and the causal mask are then applied per row).
+
     Dispatch policy comes from the context config; ``fcfg`` is a deprecated
     per-call override.
     """
@@ -166,16 +185,26 @@ def attn_apply(p: dict, x: jnp.ndarray, dims: AttnDims, positions, theta: float,
             out = flash_attention(q, k, v, positions, positions, window)
             new_cache = None
         else:
-            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                              (0, cache_index, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                              (0, cache_index, 0, 0))
+            idx = jnp.asarray(cache_index)
+            ragged = idx.ndim == 1
+            if ragged:
+                def upd(c, u, i):
+                    return jax.vmap(
+                        lambda cr, ur, ir: jax.lax.dynamic_update_slice(
+                            cr, ur.astype(cr.dtype), (ir, 0, 0)))(c, u, i)
+                ck = upd(cache["k"], k, idx)
+                cv = upd(cache["v"], v, idx)
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
             S_max = ck.shape[1]
             kpos = jnp.broadcast_to(jnp.arange(S_max)[None], (B, S_max))
             # everything written so far (prompt prefill writes S tokens at once)
-            kv_valid = kpos < cache_index + S
+            kv_valid = kpos < (idx[:, None] if ragged else idx) + S
             out = flash_attention(q, ck, cv, positions, kpos, window,
-                                  kv_valid=kv_valid)
+                                  kv_valid=kv_valid, ragged=ragged)
             new_cache = {"k": ck, "v": cv}
         out = falcon_dense(out.reshape(B, S, H * hd), p["w_o"])
         return shard_act(out, BATCH, None, None), new_cache

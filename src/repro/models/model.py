@@ -229,8 +229,12 @@ def _forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
     if cache is None:
         positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
     else:
-        positions = jnp.broadcast_to(jnp.asarray(cache_index)[None, None], (B, S)) \
-            + jnp.arange(S)[None]
+        idx = jnp.asarray(cache_index)
+        if idx.ndim == 1:       # per-row offsets (continuous-batching decode)
+            positions = idx[:, None] + jnp.arange(S)[None]
+        else:
+            positions = jnp.broadcast_to(idx[None, None], (B, S)) \
+                + jnp.arange(S)[None]
     windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
     theta = cfg.rope_theta
 

@@ -1,0 +1,15 @@
+"""Continuous-batching serve engine with bucketed plan reuse.
+
+``ServeEngine`` admits requests into a fixed slot set through power-of-two
+shape buckets so every step runs a pre-planned, pre-compiled FalconGEMM
+shape; see ``docs/serving.md``.
+"""
+from .buckets import BucketPolicy, next_pow2
+from .engine import ServeEngine, StepLoop
+from .request import Request, RequestQueue
+from .scheduler import DecodeWork, PrefillWork, Scheduler
+from .stats import ServeStats
+
+__all__ = ["BucketPolicy", "next_pow2", "ServeEngine", "StepLoop", "Request",
+           "RequestQueue", "DecodeWork", "PrefillWork", "Scheduler",
+           "ServeStats"]

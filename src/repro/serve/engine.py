@@ -1,0 +1,289 @@
+"""ServeEngine: continuous batching over bucketed, pre-planned step shapes.
+
+The engine owns a fixed set of KV-cache **slots**. Requests are admitted by
+the :class:`~repro.serve.scheduler.Scheduler` into free slots via bucketed
+prefill micro-batches (prompts right-padded to a power-of-two sequence
+bucket, per-row last-token indices pick the true logits), then advance one
+token per decode micro-batch over the active slots, padded to a power-of-two
+batch bucket. Every step therefore launches a shape from the closed
+:class:`~repro.serve.buckets.BucketPolicy` grid, so after :meth:`warm`:
+
+* the FalconGEMM Decision Module is a pure plan-cache hit per projection
+  (``core.engine.warm_buckets`` pre-planned the bucket grid),
+* static weights are already lifted to precombined :class:`PlannedWeight`\\ s
+  (offline Combine B ran once at load),
+* jit never re-traces — each bucket shape's executable exists.
+
+Correctness of padding: pad rows/positions never leak. Right-padded prefill
+writes pad K/V above each request's true length, but decode validity masks
+``kpos < pos`` and each per-slot decode write overwrites position ``pos``
+before it first becomes visible; pad *rows* of a micro-batch are sliced off
+before the slot cache update. The engine output is allclose to per-request
+eager decode (``tests/test_serve_engine.py``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.api as falcon
+from repro.configs.base import ModelConfig
+from repro.core import engine as core_engine, plan_cache
+from repro.models import model as M
+from repro.train.steps import make_decode_step, make_serve_prefill_step
+
+from .buckets import BucketPolicy, next_pow2
+from .request import Request, RequestQueue
+from .scheduler import DecodeWork, PrefillWork, Scheduler
+from .stats import ServeStats
+
+__all__ = ["ServeEngine", "StepLoop"]
+
+
+class ServeEngine:
+    """Continuous-batching serve engine for one model on the local device.
+
+    ``submit`` is thread-safe (any frontend thread); ``step``/``run`` are the
+    single consumer. Families whose state a padded prefill would corrupt
+    (SSM/hybrid recurrent state, MoE capacity contention) and non-token
+    frontends are rejected — the bucket math is only exact for dense
+    KV-cache attention.
+    """
+
+    def __init__(self, model_cfg: ModelConfig, params=None, *,
+                 max_slots: int = 8, max_prompt_len: int = 64,
+                 max_new_tokens: int = 32, policy: BucketPolicy | None = None,
+                 precombine: bool = True, record_logits: bool = False,
+                 seed: int = 0, mesh_shape: dict | None = None):
+        if model_cfg.family != "dense" or model_cfg.frontend:
+            raise NotImplementedError(
+                f"ServeEngine supports dense token models; got "
+                f"family={model_cfg.family!r} frontend={model_cfg.frontend!r} "
+                "(padded prefill corrupts SSM state / MoE routing capacity)")
+        self.cfg = model_cfg
+        self.policy = policy or BucketPolicy.build(max_prompt_len, max_slots)
+        self.max_slots = max_slots
+        self.max_new_tokens_cap = max_new_tokens
+        self.max_len = next_pow2(self.policy.prefill_seq[-1] + max_new_tokens)
+        self.record_logits = record_logits
+        self.fcfg = M.falcon_config_for(model_cfg, mesh_shape or {})
+        with falcon.use(self.fcfg):
+            self.params = params if params is not None \
+                else M.init_params(model_cfg, jax.random.PRNGKey(seed))
+            self.n_precombined = 0
+            if precombine:
+                # Offline Combine B priced at the largest prefill bucket M;
+                # each step re-decides per its actual bucket M (plan-cached).
+                m_hint = self.policy.prefill_batch[-1] * self.policy.prefill_seq[-1]
+                self.params, self.n_precombined = falcon.precombine_params(
+                    self.params, m_hint=m_hint)
+        self.queue = RequestQueue()
+        self.scheduler = Scheduler(self.queue, self.policy, max_slots)
+        self.stats = ServeStats()
+        self.requests: list[Request] = []
+        self.cache = M.init_cache(model_cfg, max_slots, self.max_len)
+        self.pos = np.zeros(max_slots, np.int32)   # per-slot next write index
+        self._prefill_fn = jax.jit(make_serve_prefill_step(model_cfg, self.max_len))
+        self._decode_fn = jax.jit(make_decode_step(model_cfg))
+        self._compiled: set[tuple] = set()          # step shapes already traced
+        self._submit_lock = threading.Lock()
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int | None = None,
+               eos_id: int | None = None) -> Request:
+        req = Request(prompt=prompt,
+                      max_new_tokens=max_new_tokens or self.max_new_tokens_cap,
+                      eos_id=eos_id)
+        self.policy.seq_bucket(req.prompt_len)      # raises if off-grid
+        if req.max_new_tokens > self.max_new_tokens_cap:
+            raise ValueError(
+                f"max_new_tokens={req.max_new_tokens} exceeds engine cap "
+                f"{self.max_new_tokens_cap} (cache is sized for the cap)")
+        with self._submit_lock:                     # frontend threads race here
+            self.queue.submit(req)
+            self.requests.append(req)
+            self.stats.requests_admitted += 1
+        return req
+
+    # -- warmup --------------------------------------------------------------
+
+    def warm(self) -> dict:
+        """Pre-plan + pre-compile the whole bucket grid.
+
+        1. ``core.engine.warm_buckets`` runs the Decision Module for every
+           (bucket M) x (projection shape) so serve-time traces only hit the
+           plan cache — including from concurrent engines sharing a warmed
+           cache file.
+        2. Each (phase, shape) step function is traced and compiled once on
+           zero inputs, so no live request ever pays a compile.
+        """
+        t0 = time.perf_counter()
+        with falcon.use(self.fcfg):
+            n_plans = core_engine.warm_buckets(
+                self.fcfg, self.cfg, self.policy.bucket_ms(),
+                dtype=str(self.cfg.dtype))
+            for (b, s) in self.policy.prefill_shapes():
+                jax.block_until_ready(self._prefill_fn(
+                    self.params, jnp.zeros((b, s), jnp.int32),
+                    jnp.zeros((b,), jnp.int32)))
+                self._compiled.add(("prefill", b, s))
+            for b in self.policy.decode_batch:
+                rows_b = jax.tree.map(
+                    lambda c: jnp.broadcast_to(
+                        c[:, :1], (c.shape[0], b) + c.shape[2:]), self.cache)
+                jax.block_until_ready(self._decode_fn(
+                    self.params, rows_b, jnp.zeros((b, 1), jnp.int32),
+                    jnp.zeros((b,), jnp.int32)))
+                self._compiled.add(("decode", b))
+        self.stats.warm_plans = n_plans
+        self.stats.warmed_shapes = len(self._compiled)
+        self.stats.t_warm = time.perf_counter() - t0
+        return {"plans": n_plans, "shapes": len(self._compiled),
+                "seconds": self.stats.t_warm}
+
+    # -- step loop -----------------------------------------------------------
+
+    def step(self) -> bool:
+        """Run one scheduler-selected micro-batch. False when idle."""
+        work = self.scheduler.next_work()
+        if work is None:
+            return False
+        if isinstance(work, PrefillWork):
+            self._run_prefill(work)
+        else:
+            self._run_decode(work)
+        return True
+
+    def run(self, max_steps: int | None = None) -> list[Request]:
+        """Step until idle (or ``max_steps``); returns finished requests."""
+        steps = 0
+        while max_steps is None or steps < max_steps:
+            if not self.step():
+                break
+            steps += 1
+        return [r for r in self.requests if r.done]
+
+    # -- execution -----------------------------------------------------------
+
+    def _note_shape(self, key: tuple) -> None:
+        if key in self._compiled:
+            self.stats.bucket_hits += 1
+        else:
+            self.stats.bucket_misses += 1
+            self._compiled.add(key)
+
+    def _run_prefill(self, work: PrefillWork) -> None:
+        B, S = work.batch_pad, work.seq_pad
+        self._note_shape(("prefill", B, S))
+        toks = np.zeros((B, S), np.int32)
+        last = np.zeros((B,), np.int32)
+        for i, r in enumerate(work.requests):
+            toks[i, :r.prompt_len] = r.prompt
+            last[i] = r.prompt_len - 1
+        t0 = time.perf_counter()
+        with falcon.use(self.fcfg):
+            logits, new_cache = self._prefill_fn(
+                self.params, jnp.asarray(toks), jnp.asarray(last))
+            jax.block_until_ready(logits)
+        k = len(work.requests)
+        slots = jnp.asarray(work.slots)
+        # pad rows i >= k are sliced off; pad positions inside a row are
+        # overwritten by decode before the validity mask admits them
+        self.cache = jax.tree.map(
+            lambda c, nc: c.at[:, slots].set(nc[:, :k].astype(c.dtype)),
+            self.cache, new_cache)
+        step_logits = np.asarray(logits[:, -1])
+        now = time.perf_counter()
+        self.stats.t_prefill += now - t0
+        self.stats.prefill_steps += 1
+        self.stats.prompt_tokens += work.real_tokens
+        self.stats.prefill_padded_tokens += work.padded_tokens
+        self.stats.generated_tokens += len(work.requests)  # first token each
+        for i, r in enumerate(work.requests):
+            self.pos[work.slots[i]] = r.prompt_len
+            r.first_token_t = now
+            self._emit(r, step_logits[i])
+
+    def _run_decode(self, work: DecodeWork) -> None:
+        k = len(work.slots)
+        b = work.batch_pad
+        self._note_shape(("decode", b))
+        idx = jnp.asarray(list(work.slots) + [work.slots[-1]] * (b - k))
+        toks = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        for i, r in enumerate(work.requests):
+            toks[i, 0] = r.generated[-1]
+            pos[i] = self.pos[work.slots[i]]
+        t0 = time.perf_counter()
+        with falcon.use(self.fcfg):
+            rows = jax.tree.map(lambda c: c[:, idx], self.cache)
+            logits, new_rows = self._decode_fn(
+                self.params, rows, jnp.asarray(toks), jnp.asarray(pos))
+            jax.block_until_ready(logits)
+        slots = jnp.asarray(work.slots)
+        self.cache = jax.tree.map(
+            lambda c, nc: c.at[:, slots].set(nc[:, :k]), self.cache, new_rows)
+        step_logits = np.asarray(logits[:, -1])
+        self.stats.t_decode += time.perf_counter() - t0
+        self.stats.decode_steps += 1
+        self.stats.generated_tokens += work.real_tokens
+        self.stats.decode_real_rows += work.real_tokens
+        self.stats.decode_padded_tokens += work.padded_tokens
+        for i, r in enumerate(work.requests):
+            self.pos[work.slots[i]] += 1
+            self._emit(r, step_logits[i])
+
+    def _emit(self, req: Request, logits_row: np.ndarray) -> None:
+        """Append the greedy next token; retire the request when finished."""
+        tok = int(np.argmax(logits_row))
+        req.generated.append(tok)
+        if self.record_logits:
+            req.logits.append(logits_row.copy())
+        hit_eos = req.eos_id is not None and tok == req.eos_id
+        if hit_eos or len(req.generated) >= req.max_new_tokens:
+            req.state = "done"
+            req.finish_t = time.perf_counter()
+            self.scheduler.release(req)
+            self.stats.requests_finished += 1
+
+    # -- observability -------------------------------------------------------
+
+    def summary(self) -> dict:
+        """ServeStats + the process plan cache, one coherent snapshot."""
+        d = self.stats.as_dict()
+        d["plan_cache"] = plan_cache.stats().as_dict()
+        d["plan_cache"]["entries"] = len(plan_cache.default_cache())
+        d["precombined_weights"] = self.n_precombined
+        d["max_len"] = self.max_len
+        d["max_slots"] = self.max_slots
+        return d
+
+
+class StepLoop:
+    """Drives a :class:`ServeEngine` until its queue and slots drain.
+
+    A thin synchronous loop for CLI/batch use; a real deployment would run
+    this on a dedicated thread while frontend threads ``submit``.
+    """
+
+    def __init__(self, engine: ServeEngine, max_steps: int | None = None):
+        self.engine = engine
+        self.max_steps = max_steps
+
+    def run_until_idle(self, poll_s: float = 0.0) -> list[Request]:
+        """Drain the engine; ``max_steps`` bounds total steps across both the
+        initial drain and the polling phase (a watchdog for wedged work)."""
+        steps = 0
+        while self.max_steps is None or steps < self.max_steps:
+            if self.engine.step():
+                steps += 1
+            elif poll_s and not self.engine.scheduler.idle:
+                time.sleep(poll_s)
+            else:
+                break
+        return [r for r in self.engine.requests if r.done]

@@ -1,0 +1,151 @@
+"""Continuous-batching scheduler: admission into slots, micro-batch formation.
+
+The scheduler owns slot accounting and decides what the next step runs:
+
+* **prefill-priority** — whenever waiting requests and free slots exist, the
+  next step is a prefill micro-batch (keeps slots full, which is what decode
+  throughput amortizes over). Requests are taken FIFO from the queue head and
+  grouped while they share the head request's sequence bucket, capped by free
+  slots and the largest prefill batch bucket.
+* otherwise, a decode micro-batch over every active slot, padded up to the
+  decode batch bucket.
+
+The scheduler never launches an off-grid shape: both work items carry their
+padded (bucket) dimensions, so the engine's jit cache and the plan cache key
+on a closed set of shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+from .buckets import BucketPolicy
+from .request import Request, RequestQueue
+
+__all__ = ["PrefillWork", "DecodeWork", "Scheduler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillWork:
+    requests: tuple[Request, ...]
+    slots: tuple[int, ...]          # one free slot per request, pre-assigned
+    batch_pad: int                  # bucketed batch (>= len(requests))
+    seq_pad: int                    # bucketed prompt length
+
+    @property
+    def real_tokens(self) -> int:
+        return sum(r.prompt_len for r in self.requests)
+
+    @property
+    def padded_tokens(self) -> int:
+        return self.batch_pad * self.seq_pad
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeWork:
+    requests: tuple[Request, ...]
+    slots: tuple[int, ...]          # the active slots, |slots| == |requests|
+    batch_pad: int                  # bucketed batch (>= len(slots))
+
+    @property
+    def real_tokens(self) -> int:
+        return len(self.slots)
+
+    @property
+    def padded_tokens(self) -> int:
+        return self.batch_pad
+
+
+class Scheduler:
+    """Admits requests into a fixed slot set and forms bucketed micro-batches."""
+
+    def __init__(self, queue: RequestQueue, policy: BucketPolicy,
+                 max_slots: int):
+        if max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        self.queue = queue
+        self.policy = policy
+        self.max_slots = max_slots
+        self._free = list(range(max_slots))[::-1]   # pop() -> lowest slot
+        self._active: dict[int, Request] = {}
+        self._lock = threading.Lock()
+
+    # -- state -------------------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        with self._lock:
+            return len(self._active)
+
+    @property
+    def n_free(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    def active_items(self) -> list[tuple[int, Request]]:
+        with self._lock:
+            return sorted(self._active.items())
+
+    @property
+    def idle(self) -> bool:
+        return self.n_active == 0 and len(self.queue) == 0
+
+    # -- step selection ----------------------------------------------------
+
+    def next_work(self) -> PrefillWork | DecodeWork | None:
+        """The next micro-batch to run, or None when idle."""
+        work = self._form_prefill()
+        if work is not None:
+            return work
+        return self._form_decode()
+
+    def _form_prefill(self) -> PrefillWork | None:
+        with self._lock:
+            n_free = len(self._free)
+        if n_free == 0:
+            return None
+        limit = min(n_free, self.policy.prefill_batch[-1])
+        head = self.queue.peek(limit)
+        if not head:
+            return None
+        # group the FIFO head while requests share its sequence bucket; a
+        # longer prompt behind a short head waits for the next micro-batch
+        # rather than inflating this one's bucket for everyone
+        seq_pad = self.policy.seq_bucket(head[0].prompt_len)
+        picked: list[Request] = []
+        for r in head:
+            if self.policy.seq_bucket(r.prompt_len) != seq_pad:
+                break
+            picked.append(r)
+        self.queue.pop(picked)
+        with self._lock:
+            slots = tuple(self._free.pop() for _ in picked)
+            for s, r in zip(slots, picked):
+                r.state, r.slot = "running", s
+                self._active[s] = r
+        return PrefillWork(
+            requests=tuple(picked), slots=slots,
+            batch_pad=self.policy.prefill_batch_bucket(len(picked)),
+            seq_pad=seq_pad)
+
+    def _form_decode(self) -> DecodeWork | None:
+        with self._lock:
+            items = sorted(self._active.items())
+        if not items:
+            return None
+        slots = tuple(s for s, _ in items)
+        reqs = tuple(r for _, r in items)
+        return DecodeWork(requests=reqs, slots=slots,
+                          batch_pad=self.policy.decode_batch_bucket(len(slots)))
+
+    # -- completion --------------------------------------------------------
+
+    def release(self, req: Request) -> None:
+        """Return a finished request's slot to the free pool."""
+        with self._lock:
+            s = req.slot
+            if self._active.get(s) is not req:
+                raise ValueError(f"request {req.rid} does not own slot {s}")
+            del self._active[s]
+            self._free.append(s)
+            req.slot = -1

@@ -1,0 +1,92 @@
+"""ServeStats: the engine's observable surface.
+
+Counters are plain ints/floats updated by the step loop (single consumer
+thread); derived rates are properties so a dashboard or test reads one
+coherent snapshot via :meth:`ServeStats.as_dict`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["ServeStats"]
+
+
+@dataclasses.dataclass
+class ServeStats:
+    # step counts
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    # token accounting. Rows: what the hardware ran — prompt_tokens and
+    # decode_real_rows are useful rows, *_padded_tokens the launched bucket
+    # area (their gap is padding waste). generated_tokens counts every token
+    # emitted to a caller (each request's first comes from its prefill step).
+    prompt_tokens: int = 0
+    generated_tokens: int = 0
+    decode_real_rows: int = 0
+    prefill_padded_tokens: int = 0
+    decode_padded_tokens: int = 0
+    # bucket reuse: a hit runs a step shape that is already compiled (warmed
+    # or previously seen); a miss pays a fresh trace + compile mid-serve
+    bucket_hits: int = 0
+    bucket_misses: int = 0
+    # warmup provenance
+    warmed_shapes: int = 0
+    warm_plans: int = 0
+    t_warm: float = 0.0
+    # phase wall-clock (step dispatch + device time, excludes warmup)
+    t_prefill: float = 0.0
+    t_decode: float = 0.0
+    # request lifecycle
+    requests_admitted: int = 0
+    requests_finished: int = 0
+
+    @property
+    def steps(self) -> int:
+        return self.prefill_steps + self.decode_steps
+
+    @property
+    def bucket_hit_rate(self) -> float:
+        total = self.bucket_hits + self.bucket_misses
+        return self.bucket_hits / total if total else 0.0
+
+    @property
+    def real_tokens(self) -> int:
+        """Tokens that reached a caller: prompts consumed + tokens emitted."""
+        return self.prompt_tokens + self.generated_tokens
+
+    @property
+    def real_rows(self) -> int:
+        return self.prompt_tokens + self.decode_real_rows
+
+    @property
+    def padded_tokens(self) -> int:
+        return self.prefill_padded_tokens + self.decode_padded_tokens
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of launched token-rows that were padding."""
+        return 1.0 - self.real_rows / self.padded_tokens \
+            if self.padded_tokens else 0.0
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        """Tokens emitted by decode steps per second of decode time (each
+        request's first token comes from prefill and is excluded here)."""
+        return self.decode_real_rows / self.t_decode if self.t_decode else 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        """Real tokens processed per second of engine step time."""
+        t = self.t_prefill + self.t_decode
+        return self.real_tokens / t if t else 0.0
+
+    def as_dict(self) -> dict:
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
+        d.update(
+            steps=self.steps,
+            bucket_hit_rate=round(self.bucket_hit_rate, 4),
+            padding_waste=round(self.padding_waste, 4),
+            tokens_per_s=round(self.tokens_per_s, 2),
+            decode_tokens_per_s=round(self.decode_tokens_per_s, 2),
+        )
+        return d

@@ -56,7 +56,14 @@ def main(argv: list[str] | None = None) -> int:
                     help="skip plan-cache warmup")
     ap.add_argument("--warm-dtype", default="bfloat16",
                     help="dtype for plan-cache warmup decisions")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: tiny probe shapes, one rep, reduced "
+                         "plan-cache warm grid")
     args = ap.parse_args(argv)
+    if args.quick:
+        args.reps, args.warmup = 1, 0
+        if args.shape is None:
+            args.shape = [(192, 192, 192), (384, 384, 384)]
 
     from repro.core import autotune, plan_cache
     from repro.core.falcon_gemm import FalconConfig, plan
@@ -95,7 +102,10 @@ def main(argv: list[str] | None = None) -> int:
         cache = plan_cache.configure(path=cache_path, autoload=False)
         cfg = FalconConfig(hardware=prof.name)
         n_lcma = 0
-        for (m, k, n) in warm_shapes():
+        shapes = warm_shapes()
+        if args.quick:
+            shapes = shapes[:8]
+        for (m, k, n) in shapes:
             d = plan(m, k, n, cfg, dtype=args.warm_dtype)
             n_lcma += int(d.use_lcma)
         cache.save()

@@ -23,7 +23,8 @@ from repro.optim import AdamWConfig, adamw_update, cosine_schedule
 from repro.parallel.compression import compressed_psum_mean
 
 __all__ = ["make_train_step", "make_eval_step", "make_prefill_step",
-           "make_decode_step", "make_compressed_dp_train_step"]
+           "make_serve_prefill_step", "make_decode_step",
+           "make_compressed_dp_train_step"]
 
 
 def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
@@ -103,8 +104,40 @@ def make_prefill_step(cfg: ModelConfig, max_len: int, fcfg=None):
     return prefill_step
 
 
+def make_serve_prefill_step(cfg: ModelConfig, max_len: int, fcfg=None):
+    """Prefill for bucketed serving: right-padded prompts, per-row last index.
+
+    The continuous-batching engine pads every prompt in a micro-batch up to
+    the bucket length, so "last token" differs per row: ``last_index`` (B,)
+    selects each request's true final prompt position before the LM head
+    runs (on (B, 1, d) — the padded tail never reaches the vocab matmul).
+    Returns (logits (B, 1, V), cache) with the cache sized to ``max_len`` so
+    its rows slot directly into the engine's slot cache.
+    """
+    if fcfg is not None:
+        engine.warn_deprecated_fcfg("make_serve_prefill_step")
+
+    def prefill_step(params, tokens, last_index):
+        with engine.maybe_use(fcfg):
+            B = tokens.shape[0]
+            cache = M.init_cache(cfg, B, max_len)
+            hidden, cache, _ = M.forward(params, cfg, tokens, cache=cache,
+                                         cache_index=0, logits_mode="none")
+            h_last = jnp.take_along_axis(
+                hidden, last_index[:, None, None].astype(jnp.int32), axis=1)
+            logits = M.compute_logits(params, cfg, h_last)
+            return logits, cache
+
+    return prefill_step
+
+
 def make_decode_step(cfg: ModelConfig, fcfg=None):
-    """One-token decode against a KV cache at position ``index``."""
+    """One-token decode against a KV cache at position ``index``.
+
+    ``index`` is a scalar (uniform batch) or an int vector (B,) of per-row
+    positions — the continuous-batching case where every slot in the decode
+    micro-batch sits at its own generation offset.
+    """
     if fcfg is not None:
         engine.warn_deprecated_fcfg("make_decode_step")
 

@@ -1,0 +1,97 @@
+"""Benchmark driver + machine-readable report: failure isolation and the
+regression gate (the CI bench-smoke contract)."""
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:                       # benchmarks/ is a namespace pkg
+    sys.path.insert(0, REPO)
+
+from benchmarks import report as bench_report  # noqa: E402
+from benchmarks import run as bench_run        # noqa: E402
+
+
+def _report(metrics, failures=()):
+    return {"version": 1, "failures": list(failures), "metrics": metrics}
+
+
+def _m(value, higher=True, tolerance=None):
+    d = {"value": value, "unit": "x", "higher_is_better": higher}
+    if tolerance is not None:
+        d["tolerance"] = tolerance
+    return d
+
+
+def test_check_regressions_green_and_red():
+    base = _report({"a.speed": _m(100.0), "b.err": _m(0.01, higher=False)})
+    ok = _report({"a.speed": _m(85.0), "b.err": _m(0.011, higher=False)})
+    assert bench_report.check_regressions(ok, base) == []
+    bad = _report({"a.speed": _m(70.0), "b.err": _m(0.02, higher=False)})
+    problems = bench_report.check_regressions(bad, base)
+    assert len(problems) == 2
+    assert any("a.speed" in p for p in problems)
+    assert any("b.err" in p for p in problems)
+
+
+def test_check_regressions_per_metric_tolerance_and_missing():
+    base = _report({"a.speed": _m(100.0, tolerance=0.5), "gone": _m(1.0)})
+    new = _report({"a.speed": _m(55.0)})       # within the widened band
+    problems = bench_report.check_regressions(new, base)
+    assert problems == ["gone: missing from new report (baseline 1)"]
+
+
+def test_check_regressions_flags_section_failures():
+    base = _report({})
+    new = _report({}, failures=["serve"])
+    problems = bench_report.check_regressions(new, base)
+    assert problems and "serve" in problems[0]
+
+
+def test_committed_baseline_parses_against_schema():
+    path = os.path.join(REPO, "benchmarks", "baseline_cpu.json")
+    doc = json.load(open(path))
+    assert doc["version"] == bench_report.REPORT_VERSION
+    assert doc["metrics"], "baseline must gate at least one metric"
+    for name, m in doc["metrics"].items():
+        assert isinstance(m["value"], (int, float)), name
+        assert isinstance(m["higher_is_better"], bool), name
+    # a report identical to the baseline is green by construction
+    assert bench_report.check_regressions(doc, doc) == []
+
+
+def test_run_sections_isolate_failures(monkeypatch, tmp_path, capsys):
+    """One exploding section must not kill the others — but must fail the
+    process and be recorded in the JSON report (the old driver exited 0)."""
+    calls = []
+
+    def fake_sections(quick):
+        return [
+            ("boom", "exploding section", lambda: (_ for _ in ()).throw(
+                RuntimeError("mid-benchmark crash"))),
+            ("serve", "working section",
+             lambda: calls.append("ran") or [
+                 {"requests": 1, "finished": 1, "warm_plans": 0,
+                  "warm_shapes": 0, "warm_s": 0.0, "prefill_steps": 1,
+                  "decode_steps": 1, "tokens_per_s": 10.0,
+                  "decode_tokens_per_s": 5.0, "bucket_hit_rate": 1.0,
+                  "padding_waste": 0.1, "plan_cache_hit_rate": 0.9,
+                  "plan_cache_entries": 3}]),
+        ]
+
+    monkeypatch.setattr(bench_run, "_sections", fake_sections)
+    out = str(tmp_path / "bench.json")
+    rc = bench_run.main(["--quick", "--json", out])
+    assert rc == 1
+    assert calls == ["ran"], "later sections must still run"
+    doc = json.load(open(out))
+    assert doc["failures"] == ["boom"]
+    assert doc["metrics"]["serve.tokens_per_s"]["value"] == 10.0
+    assert "FAILED section 'boom'" in capsys.readouterr().err
+
+
+def test_run_exit_zero_when_clean(monkeypatch, tmp_path):
+    monkeypatch.setattr(bench_run, "_sections",
+                        lambda quick: [("noop", "noop", lambda: [])])
+    rc = bench_run.main(["--json", str(tmp_path / "b.json")])
+    assert rc == 0

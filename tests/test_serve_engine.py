@@ -1,0 +1,383 @@
+"""Continuous-batching serve engine: buckets, scheduler, engine vs eager,
+plan-cache warm/bucket reuse, and concurrent plan-cache writers."""
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as falcon
+from repro.configs import registry
+from repro.core import engine as core_engine, plan_cache
+from repro.core.falcon_gemm import FalconConfig, plan
+from repro.models import model as M
+from repro.serve import (BucketPolicy, Request, RequestQueue, Scheduler,
+                         ServeEngine, StepLoop, next_pow2)
+from repro.serve.scheduler import DecodeWork, PrefillWork
+from repro.train.steps import (make_decode_step, make_prefill_step,
+                               make_serve_prefill_step)
+
+CFG = registry.smoke_config("granite_3_2b")
+
+# a small closed set of prompt lengths keeps the eager-reference jit count
+# bounded while still exercising both sequence buckets and ragged decode
+PROMPT_LENS = (3, 8, 11, 16)
+
+
+# ---------------------------------------------------------------------------
+# Buckets
+# ---------------------------------------------------------------------------
+
+def test_next_pow2():
+    assert [next_pow2(n) for n in (1, 2, 3, 5, 8, 9, 31)] == \
+        [1, 2, 4, 8, 8, 16, 32]
+    with pytest.raises(ValueError):
+        next_pow2(0)
+
+
+def test_bucket_policy_grid():
+    p = BucketPolicy.build(max_prompt_len=24, max_slots=4, min_seq=8)
+    assert p.prefill_seq == (8, 16, 32)
+    assert p.prefill_batch == (1, 2, 4)
+    assert p.decode_batch == (1, 2, 4)
+    assert p.seq_bucket(3) == 8 and p.seq_bucket(17) == 32
+    assert p.decode_batch_bucket(3) == 4
+    with pytest.raises(ValueError):
+        p.seq_bucket(33)
+    ms = p.bucket_ms()
+    assert ms == sorted(set(ms))
+    assert set(p.decode_batch) <= set(ms)
+    assert 4 * 32 in ms           # largest prefill M
+
+
+# ---------------------------------------------------------------------------
+# Request queue
+# ---------------------------------------------------------------------------
+
+def test_request_queue_fifo_and_threaded_submit():
+    q = RequestQueue()
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=2) for _ in range(16)]
+    threads = [threading.Thread(target=q.submit, args=(r,)) for r in reqs]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(q) == 16
+    head = q.peek(4)
+    assert len(head) == 4
+    q.pop(head[:2])
+    assert len(q) == 14
+    assert q.peek(1)[0] is head[2]    # FIFO order preserved after pop
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        Request(prompt=[])
+    with pytest.raises(ValueError):
+        Request(prompt=[1], max_new_tokens=0)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+def _sched(max_slots=4):
+    q = RequestQueue()
+    policy = BucketPolicy.build(max_prompt_len=16, max_slots=max_slots, min_seq=8)
+    return q, Scheduler(q, policy, max_slots=max_slots)
+
+
+def test_scheduler_prefill_groups_by_seq_bucket():
+    q, s = _sched()
+    for plen in (5, 7, 16, 6):        # buckets: 8, 8, 16, 8
+        q.submit(Request(prompt=list(range(1, plen + 1)), max_new_tokens=2))
+    work = s.next_work()
+    assert isinstance(work, PrefillWork)
+    # FIFO head group: the two 8-bucket prompts before the 16-bucket one
+    assert [r.prompt_len for r in work.requests] == [5, 7]
+    assert work.seq_pad == 8 and work.batch_pad == 2
+    assert work.padded_tokens == 16 and work.real_tokens == 12
+    # next: still free slots + waiting work, so prefill again; the 16-bucket
+    # head runs alone (the 8-bucket prompt behind it starts its own group)
+    work2 = s.next_work()
+    assert isinstance(work2, PrefillWork)
+    assert [r.prompt_len for r in work2.requests] == [16]
+    assert work2.seq_pad == 16 and work2.batch_pad == 1
+    work3 = s.next_work()
+    assert isinstance(work3, PrefillWork)
+    assert [r.prompt_len for r in work3.requests] == [6]
+    assert s.n_free == 0
+    work4 = s.next_work()
+    assert isinstance(work4, DecodeWork)
+    assert work4.batch_pad == 4 and len(work4.slots) == 4
+    # releasing a slot lets admission resume
+    done = work.requests[0]
+    s.release(done)
+    assert s.n_free == 1
+
+
+def test_scheduler_slot_exhaustion_forces_decode():
+    q, s = _sched(max_slots=1)
+    q.submit(Request(prompt=[1, 2], max_new_tokens=2))
+    q.submit(Request(prompt=[3, 4], max_new_tokens=2))
+    w1 = s.next_work()
+    assert isinstance(w1, PrefillWork) and len(w1.requests) == 1
+    w2 = s.next_work()
+    assert isinstance(w2, DecodeWork)      # no free slot: decode runs
+    assert len(q) == 1
+
+
+# ---------------------------------------------------------------------------
+# Serve prefill step: per-row last index on right-padded prompts
+# ---------------------------------------------------------------------------
+
+def test_serve_prefill_matches_unpadded_prefill(rng):
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    prompt = rng.integers(0, CFG.vocab_size, 11)
+    ref_fn = jax.jit(make_prefill_step(CFG, max_len=32))
+    ref_logits, _ = ref_fn(params, jnp.asarray(prompt[None], jnp.int32))
+    toks = np.zeros((2, 16), np.int32)
+    toks[0, :11] = prompt
+    toks[1, :5] = prompt[:5]
+    fn = jax.jit(make_serve_prefill_step(CFG, max_len=32))
+    logits, cache = fn(params, jnp.asarray(toks), jnp.asarray([10, 4], jnp.int32))
+    assert logits.shape[:2] == (2, 1)
+    assert cache["k"].shape[2] == 32     # cache sized to engine max_len
+    np.testing.assert_allclose(np.asarray(logits[0, -1]),
+                               np.asarray(ref_logits[0, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Engine vs unbatched eager decode (the tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    """One warmed engine serving 8 ragged requests, with recorded logits."""
+    plan_cache.reset()
+    engine = ServeEngine(CFG, max_slots=4, max_prompt_len=16,
+                         max_new_tokens=4, record_logits=True, seed=0)
+    warm = engine.warm()
+    misses_after_warm = plan_cache.stats().misses
+    rng = np.random.default_rng(7)
+    for i in range(8):
+        plen = int(PROMPT_LENS[i % len(PROMPT_LENS)])
+        engine.submit(rng.integers(0, CFG.vocab_size, plen),
+                      max_new_tokens=int(rng.integers(1, 5)))
+    done = StepLoop(engine).run_until_idle()
+    misses_after_serve = plan_cache.stats().misses
+    return engine, warm, (misses_after_warm, misses_after_serve), done
+
+
+def test_engine_completes_all_requests(served):
+    engine, _, _, done = served
+    assert len(done) == 8
+    assert all(r.done for r in engine.requests)
+    assert all(1 <= len(r.generated) <= 4 for r in done)
+    assert engine.scheduler.idle
+    s = engine.summary()
+    assert s["requests_finished"] == 8
+    assert s["generated_tokens"] == sum(len(r.generated) for r in done)
+
+
+def test_engine_output_allclose_vs_eager_decode(served):
+    engine, _, _, done = served
+    params = M.init_params(CFG, jax.random.PRNGKey(0))   # same seed as engine
+    decode = jax.jit(make_decode_step(CFG))
+    prefills = {}                                        # one jit per length
+    for r in done:
+        plen = r.prompt_len
+        if plen not in prefills:
+            prefills[plen] = jax.jit(make_prefill_step(CFG, max_len=32))
+        logits, cache = prefills[plen](
+            params, jnp.asarray(np.asarray(r.prompt)[None], jnp.int32))
+        toks, ref_logits = [], []
+        for i in range(len(r.generated)):
+            row = np.asarray(logits[0, -1])
+            ref_logits.append(row)
+            nxt = int(np.argmax(row))
+            toks.append(nxt)
+            if len(toks) == len(r.generated):
+                break
+            logits, cache = decode(params, cache,
+                                   jnp.asarray([[nxt]], jnp.int32), plen + i)
+        assert toks == r.generated, (r.rid, toks, r.generated)
+        for got, ref in zip(r.logits, ref_logits):
+            np.testing.assert_allclose(got, ref, rtol=1e-3, atol=1e-3)
+
+
+def test_engine_bucket_hit_rate_after_warm(served):
+    engine, warm, (misses_after_warm, misses_after_serve), _ = served
+    s = engine.summary()
+    assert warm["shapes"] == len(engine.policy.prefill_shapes()) \
+        + len(engine.policy.decode_batch)
+    # every step ran a pre-compiled bucket shape
+    assert s["bucket_hit_rate"] >= 0.9, s
+    assert s["bucket_misses"] == 0
+    # ... and a pre-planned one: serving added no Decision-Module misses
+    assert misses_after_serve == misses_after_warm
+    assert s["padding_waste"] < 0.9
+
+
+def test_engine_rejects_unsupported_family():
+    with pytest.raises(NotImplementedError):
+        ServeEngine(registry.smoke_config("mamba2_370m"))
+    with pytest.raises(NotImplementedError):
+        ServeEngine(registry.smoke_config("pixtral_12b"))
+
+
+def test_engine_submit_validation():
+    engine = ServeEngine(CFG, max_slots=2, max_prompt_len=8, max_new_tokens=2)
+    with pytest.raises(ValueError):
+        engine.submit(list(range(9)))            # prompt off the bucket grid
+    with pytest.raises(ValueError):
+        engine.submit([1, 2], max_new_tokens=3)  # exceeds engine cap
+
+
+# ---------------------------------------------------------------------------
+# warm_buckets: pre-planning makes serving a pure plan-cache hit
+# ---------------------------------------------------------------------------
+
+def test_warm_buckets_preplans_grid():
+    plan_cache.reset()
+    cfg = FalconConfig(hardware="tpu_v5e")
+    buckets = [1, 2, 4, 64, 128]
+    n = core_engine.warm_buckets(cfg, CFG, buckets, dtype="float32")
+    shapes = core_engine.projection_shapes(CFG)
+    assert n == 2 * len(buckets) * len(shapes)
+    st0 = plan_cache.stats()
+    assert st0.misses == n and st0.inserts == n
+    # replan the whole grid (both profitability variants): zero new misses
+    for mb in buckets:
+        for (K, N) in shapes:
+            plan(mb, K, N, cfg, "float32")
+            plan(mb, K, N, cfg, "float32", precombined_b=True)
+    st = plan_cache.stats()
+    assert st.misses == n
+    assert st.hits == n
+
+
+def test_projection_shapes_cover_model_dims():
+    shapes = core_engine.projection_shapes(CFG)
+    d = CFG.d_model
+    H, hd = CFG.num_heads, CFG.resolved_head_dim
+    assert (d, H * hd) in shapes and (H * hd, d) in shapes
+    assert (d, CFG.d_ff) in shapes and (CFG.d_ff, d) in shapes
+    assert (d, -(-CFG.vocab_size // 256) * 256) in shapes
+    assert len(shapes) == len(set(shapes))
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: concurrent-writer safety
+# ---------------------------------------------------------------------------
+
+def _mk_decision(m):
+    cfg = FalconConfig(hardware="tpu_v5e", use_plan_cache=False)
+    return plan(m, 512, 512, cfg, "float32")
+
+
+def test_plan_cache_concurrent_writers(tmp_path):
+    """Writers with independent caches on one path must union, not clobber."""
+    path = str(tmp_path / "plans.json")
+    n_writers, per_writer = 8, 4
+    errors = []
+
+    def writer(i):
+        try:
+            c = plan_cache.PlanCache(path=path, autoload=False)
+            for j in range(per_writer):
+                c.insert(f"w{i}_e{j}", _mk_decision(64 + i))
+            c.save()
+        except Exception as e:          # pragma: no cover - failure reporting
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(n_writers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    doc = json.load(open(path))
+    keys = {k for k, _ in doc["entries"]}
+    assert keys == {f"w{i}_e{j}" for i in range(n_writers)
+                    for j in range(per_writer)}
+    # no temp/lock debris beyond the sidecar lock file
+    leftovers = [f for f in os.listdir(tmp_path) if ".tmp." in f]
+    assert leftovers == []
+    # a fresh cache loads the union
+    c = plan_cache.PlanCache(path=path)
+    assert len(c) == n_writers * per_writer
+
+
+def test_plan_cache_save_merges_disk_entries(tmp_path):
+    path = str(tmp_path / "plans.json")
+    a = plan_cache.PlanCache(path=path, autoload=False)
+    a.insert("only_a", _mk_decision(32))
+    a.save()
+    b = plan_cache.PlanCache(path=path, autoload=False)
+    b.insert("only_b", _mk_decision(48))
+    b.save()                                  # must keep a's entry
+    doc = json.load(open(path))
+    assert {k for k, _ in doc["entries"]} == {"only_a", "only_b"}
+    c = plan_cache.PlanCache(path=path, autoload=False)
+    c.insert("only_c", _mk_decision(96))
+    c.save(merge=False)                       # explicit overwrite still works
+    doc = json.load(open(path))
+    assert {k for k, _ in doc["entries"]} == {"only_c"}
+
+
+def test_plan_cache_threaded_shared_instance():
+    """The in-process default cache takes concurrent replans (the scheduler
+    replans from multiple threads sharing one cache)."""
+    plan_cache.reset()
+    cfg = FalconConfig(hardware="tpu_v5e")
+
+    def worker():
+        for m in (64, 128, 256):
+            plan(m, 1024, 1024, cfg, "bfloat16")
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    st = plan_cache.stats()
+    assert st.lookups == 8 * 3
+    assert len(plan_cache.default_cache()) == 3   # one entry per shape
+
+
+# ---------------------------------------------------------------------------
+# Nightly soak (larger shapes; gated off the PR lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not os.environ.get("FALCON_SOAK"),
+                    reason="nightly soak only (FALCON_SOAK=1)")
+def test_soak_larger_shapes():
+    plan_cache.reset()
+    engine = ServeEngine(CFG, max_slots=8, max_prompt_len=64,
+                         max_new_tokens=12, seed=0)
+    engine.warm()
+    rng = np.random.default_rng(0)
+    for _ in range(48):
+        plen = int(rng.integers(4, 65))
+        engine.submit(rng.integers(0, CFG.vocab_size, plen),
+                      max_new_tokens=int(rng.integers(1, 13)))
+    done = StepLoop(engine).run_until_idle()
+    s = engine.summary()
+    assert len(done) == 48
+    assert s["bucket_hit_rate"] >= 0.9, s
+    assert s["generated_tokens"] == sum(len(r.generated) for r in done)
+
+
+# keep the falcon import meaningful: the engine runs under the ambient config
+def test_engine_uses_ambient_falcon_config():
+    engine = ServeEngine(CFG, max_slots=2, max_prompt_len=8, max_new_tokens=2,
+                         precombine=False)
+    assert engine.fcfg.enabled == CFG.use_falcon
+    with falcon.use(engine.fcfg):
+        assert falcon.active_config() is engine.fcfg
