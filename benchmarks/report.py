@@ -145,6 +145,13 @@ def to_metrics(results: dict) -> dict:
         m["serve.padding_waste"] = _metric(r["padding_waste"], "frac",
                                            higher_is_better=False)
         m["serve.plan_cache_hit_rate"] = _metric(r["plan_cache_hit_rate"], "frac")
+    for r in results.get("train_bwd") or []:
+        m[f"train_bwd.planned_bwd_gflops_n{r['n']}"] = _metric(
+            r["planned_bwd_gflops"], "GFLOPS")
+        m[f"train_bwd.planned_over_through_n{r['n']}"] = _metric(
+            r["planned_over_through"], "x")
+        m[f"train_bwd.bwd_planned_frac_n{r['n']}"] = _metric(
+            r["bwd_planned_frac"], "frac")
     for r in results.get("precision") or []:
         m[f"precision.fused_rel_err_{r['algo']}_n{r['n']}"] = _metric(
             r["fused_rel_err"], "rel_err", higher_is_better=False)

@@ -21,7 +21,7 @@ import traceback
 
 def _sections(quick: bool):
     from . import (e2e_llm, operator_level, plan_cache, precision,
-                   roofline_fig8, serve_bench, stepwise)
+                   roofline_fig8, serve_bench, stepwise, train_bwd)
 
     return [
         ("operator_level",
@@ -45,6 +45,9 @@ def _sections(quick: bool):
          lambda: serve_bench.run(requests=8 if quick else 16,
                                  max_prompt_len=16 if quick else 32,
                                  max_new_tokens=4 if quick else 8)),
+        ("train_bwd",
+         "Planned custom-VJP backward pass vs differentiate-through",
+         lambda: train_bwd.run(sizes=(256, 512) if quick else (512, 1024))),
         ("precision",
          "IV-F numerical precision: fused vs downcast-H",
          lambda: precision.run(sizes=(64, 128) if quick else (64, 128, 256))),

@@ -1,0 +1,105 @@
+"""Backward-pass benchmark: planned custom-VJP training vs differentiate-through.
+
+Measures one ``jax.value_and_grad`` of a falcon-dispatched loss under the two
+autodiff regimes the engine supports:
+
+  * ``planned_vjp=True``  — the custom VJP computes ``dA = g Bᵀ`` and
+    ``dB = Aᵀ g`` as independently planned falcon contractions,
+  * ``planned_vjp=False`` — autodiff transposes the combine/R-GEMM/combine
+    graph (the pre-tentpole behavior).
+
+Also reports the structural acceptance signal: after tracing the planned
+step in auto mode, the plan cache must contain entries for both backward
+shapes of every contraction (``bwd_planned_frac == 1.0`` — gated in CI).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, plan_cache
+from repro.core.decision import backward_shapes
+from repro.core.falcon_gemm import FalconConfig
+from repro.core.hardware import HardwareProfile, register_profile
+
+from .common import effective_gflops, time_fn
+
+# Deterministic profile for the structural bwd_planned_frac gate: enormous
+# bandwidth makes every benchmark shape compute-bound, so the auto-mode
+# forward always picks an LCMA and engages the custom-VJP core regardless of
+# the CI host's measured characteristics.
+LCMA_ALWAYS = HardwareProfile(name="train_bwd_lcma_always",
+                              flops_mul=1e12, flops_add=1e12, beta=1e15)
+
+
+def _grad_step(cfg: FalconConfig):
+    def loss(a, b):
+        return jnp.sum(engine.matmul(a, b, cfg=cfg) ** 2)
+
+    return jax.jit(jax.value_and_grad(loss, (0, 1)))
+
+
+def run(sizes=(512, 1024), verbose=True):
+    prof = register_profile(LCMA_ALWAYS)
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in sizes:
+        # Rectangular on purpose: for a square problem the two backward
+        # shapes coincide with the forward shape and the structural check
+        # below would be vacuously true. (n, n/2) @ (n/2, 2n) gives three
+        # distinct plan-cache keys for fwd / dA / dB.
+        M, K, N = n, n // 2, 2 * n
+        A = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+        B = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+
+        base = FalconConfig(mode="strassen", backend="jnp")
+        t_planned = time_fn(_grad_step(base), A, B)
+        t_through = time_fn(_grad_step(
+            dataclasses.replace(base, planned_vjp=False)), A, B)
+        t_eager = time_fn(jax.jit(jax.value_and_grad(
+            lambda a, b: jnp.sum((a @ b) ** 2), (0, 1))), A, B)
+
+        # Structural check: auto-mode trace must pre-plan both bwd shapes.
+        plan_cache.reset()
+        auto = FalconConfig(mode="auto", hardware=prof.name, backend="jnp")
+        jax.jit(jax.value_and_grad(
+            lambda a, b: jnp.sum(engine.matmul(a, b, cfg=auto) ** 2),
+            (0, 1)))(A, B)
+        cache = plan_cache.default_cache()
+        want = {(M, K, N)} | set(backward_shapes(M, K, N))
+        assert len(want) == 3, want     # rectangular => three distinct keys
+        frac = sum(cache.has_shape(*s) for s in want) / len(want)
+        plan_cache.reset()
+
+        # grad FLOPs: fwd (2MNK) + two bwd GEMMs of the same volume
+        gflops = lambda t: effective_gflops(M, N, K, t) * 3
+        rows.append({
+            "n": n,
+            "planned_bwd_gflops": gflops(t_planned),
+            "through_bwd_gflops": gflops(t_through),
+            "eager_bwd_gflops": gflops(t_eager),
+            "planned_over_through": t_through / t_planned,
+            "bwd_planned_frac": frac,
+        })
+        if verbose:
+            r = rows[-1]
+            print(f"train_bwd,n={n}: planned={r['planned_bwd_gflops']:.1f} "
+                  f"through={r['through_bwd_gflops']:.1f} "
+                  f"eager={r['eager_bwd_gflops']:.1f} GF/s | "
+                  f"planned/through={r['planned_over_through']:.2f}x | "
+                  f"bwd shapes planned: {r['bwd_planned_frac']:.0%}")
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"train_bwd,{r['n']},{r['planned_bwd_gflops']:.1f},"
+              f"{r['through_bwd_gflops']:.1f},{r['planned_over_through']:.3f},"
+              f"{r['bwd_planned_frac']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

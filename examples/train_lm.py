@@ -18,6 +18,7 @@ from repro.data import DataConfig, SyntheticLMData
 from repro.models import model as M
 from repro.optim import AdamWConfig, adamw_init
 from repro.train import TrainLoop, TrainLoopConfig, make_train_step
+from repro.train.steps import warm_train
 
 
 def config_100m(quick: bool) -> ModelConfig:
@@ -59,7 +60,10 @@ def main():
     loop = TrainLoop(
         TrainLoopConfig(total_steps=args.steps, checkpoint_every=100,
                         checkpoint_dir=args.ckpt, log_every=10),
-        step, data, params, opt_state)
+        step, data, params, opt_state,
+        # pre-plan every fwd+dA+dB shape triple so the first step's trace
+        # (which compiles the planned custom-VJP backward) is plan-cache-hot
+        warm_fn=lambda: warm_train(cfg, args.batch, args.seq))
     import logging
     logging.basicConfig(level=logging.INFO, format="%(message)s")
     out = loop.run()

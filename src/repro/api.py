@@ -23,19 +23,23 @@ from __future__ import annotations
 
 from repro.core.backends import (Backend, available_backends, get_backend,
                                  register_backend, unregister_backend)
+from repro.core.decision import backward_shapes
 from repro.core.engine import (FalconEngine, PlannedWeight, active_config,
                                current_config, dense, dot_general, einsum,
                                matmul, plan_weight, precombine_params,
-                               projection_shapes, use, warm_buckets)
+                               projection_shapes, refresh_planned_params, use,
+                               warm_buckets)
 from repro.core.falcon_gemm import (FalconConfig, falcon_dense, falcon_matmul,
                                     matmul_with_precombined, plan,
-                                    precombine_weights)
+                                    plan_training, precombine_weights)
 
 __all__ = [
     # context-scoped config
     "use", "current_config", "active_config", "FalconConfig", "FalconEngine",
     # dispatch entry points
     "dense", "matmul", "dot_general", "einsum", "plan",
+    # planned training (custom-VJP backward)
+    "plan_training", "backward_shapes", "refresh_planned_params",
     # precombined weights (offline Combine B)
     "PlannedWeight", "plan_weight", "precombine_params",
     "precombine_weights", "matmul_with_precombined",

@@ -27,7 +27,8 @@ from .lcma import LCMA, validate
 __all__ = [
     "standard", "strassen", "strassen_winograd", "laderman",
     "tensor_product", "concat_m", "concat_k", "concat_n",
-    "cyclic", "transpose_dual", "library", "get", "candidates",
+    "cyclic", "transpose_dual", "library", "get", "candidates", "register",
+    "unregister",
 ]
 
 
@@ -313,6 +314,31 @@ def library() -> dict[str, LCMA]:
 
 def get(name: str) -> LCMA:
     return library()[name]
+
+
+def register(l: LCMA, overwrite: bool = False) -> LCMA:
+    """Add a user scheme to the library (resolvable via ``FalconConfig.mode``
+    / ``candidates``).
+
+    Registration revalidates the tensor identity even though ``LCMA``'s
+    constructor already vetted the coefficient *domain* (integer, int8
+    range): an externally sourced listing (AlphaTensor standard-arithmetic,
+    Smirnov ⟨3,3,6⟩) with |c| > 1 coefficients must prove it actually
+    multiplies matrices before the dispatcher may pick it.
+    """
+    if not validate(l):
+        raise ValueError(f"LCMA {l.name} {l.key} failed the tensor identity")
+    lib = library()
+    if l.name in lib and not overwrite:
+        raise ValueError(f"LCMA {l.name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    lib[l.name] = l
+    return l
+
+
+def unregister(name: str) -> None:
+    """Remove a user scheme (tests / plugin teardown). Unknown names no-op."""
+    library().pop(name, None)
 
 
 def candidates(max_grid: int = 5, min_saving: float = 0.0) -> list[LCMA]:

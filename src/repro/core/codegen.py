@@ -68,15 +68,21 @@ class GeneratedLCMA:
 # --------------------------------------------------------------------------
 
 def _lin_comb(terms: list[tuple[int, str]]) -> str:
-    """Emit ``+x - y + z`` from [(coeff, name), ...] with coeff in {-1,+1}."""
+    """Emit ``+x - 2 * y + z`` from [(coeff, name), ...] for integer coeffs.
+
+    Magnitudes other than 1 (AlphaTensor standard-arithmetic listings,
+    Smirnov-family schemes) are emitted as literal scalings so constant
+    folding still applies; dropping them silently computed wrong results.
+    """
     if not terms:
         return "0.0"
     out = []
     for idx, (c, name) in enumerate(terms):
+        term = name if abs(c) == 1 else f"{abs(c)} * {name}"
         if idx == 0:
-            out.append(name if c > 0 else f"-{name}")
+            out.append(term if c > 0 else f"-{term}")
         else:
-            out.append(f"+ {name}" if c > 0 else f"- {name}")
+            out.append(f"+ {term}" if c > 0 else f"- {term}")
     return " ".join(out)
 
 

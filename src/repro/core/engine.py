@@ -17,6 +17,11 @@ level — *portable execution across hardware and input configurations*:
   weight together with its chosen LCMA and offline-combined B̃ (paper §IV-C
   "offline Combine B"); ``dense``/``dot_general``/``matmul`` accept it
   transparently, and :func:`precombine_params` lifts a whole model pytree.
+* **Planned autodiff** — the dispatch core carries a ``jax.custom_vjp``: the
+  backward GEMMs (``dA = g Bᵀ``, ``dB = Aᵀ g``) run as independently planned
+  falcon contractions instead of the autodiff transpose of the combine
+  graph, PlannedWeights are trainable, and
+  :func:`refresh_planned_params` keeps B̃ consistent across optimizer steps.
 
 ``repro.api`` re-exports this surface; ``import repro.api as falcon``.
 """
@@ -25,6 +30,7 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import dataclasses
+import functools
 import warnings
 from typing import Any
 
@@ -33,14 +39,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import algorithms, backends
-from .falcon_gemm import (FalconConfig, _lcma_apply, matmul_with_precombined,
-                          plan, precombine_weights)
+from .decision import backward_shapes
+from .falcon_gemm import (FalconConfig, _lcma_apply, _pad2,
+                          matmul_with_precombined, plan, plan_training,
+                          precombine_weights)
 from .lcma import LCMA
 
 __all__ = ["use", "current_config", "active_config", "maybe_use",
            "config_scope", "matmul", "dense", "dot_general", "einsum",
            "PlannedWeight", "plan_weight", "precombine_params",
-           "projection_shapes", "warm_buckets", "FalconEngine"]
+           "refresh_planned_params", "projection_shapes", "warm_buckets",
+           "FalconEngine"]
 
 
 # ---------------------------------------------------------------------------
@@ -273,7 +282,15 @@ def _apply_planned(x: jnp.ndarray, pw: PlannedWeight,
         use_pre = d.use_lcma
     if not use_pre:
         return jnp.matmul(x, pw.w)
-    if be.apply_precombined is not None:
+    if cfg.planned_vjp:
+        # Trainable precombined apply: the custom-VJP core routes the
+        # gradient to the raw weight (planned dW = x2ᵀ g) when it is kept,
+        # or to B̃ itself via the rotated rank-R scheme when it was dropped.
+        if pw.w is not None:
+            out2 = _pw_core(cfg, pw.algo, pw.n, True)(x2, pw.w, pw.bt)
+        else:
+            out2 = _pw_core(cfg, pw.algo, pw.n, False)(x2, pw.bt)
+    elif be.apply_precombined is not None:
         out2 = be.apply_precombined(x2, pw.bt, pw.lcma, pw.n, cfg)
     else:  # backend has no native precombined path: generated jnp combines
         out2 = matmul_with_precombined(x2, pw.bt, pw.lcma, pw.n, cfg)
@@ -315,7 +332,7 @@ def projection_shapes(arch) -> list[tuple[int, int]]:
 
 
 def warm_buckets(cfg: FalconConfig | None, arch, buckets,
-                 dtype: str | None = None) -> int:
+                 dtype: str | None = None, train: bool = False) -> int:
     """Pre-plan every projection of ``arch`` at every bucketed M.
 
     The continuous-batching scheduler only ever launches bucket shapes, so
@@ -324,6 +341,11 @@ def warm_buckets(cfg: FalconConfig | None, arch, buckets,
     serve-time traces are pure plan-cache hits. Returns the number of
     ``plan()`` calls issued. ``buckets`` are activation-row counts
     (batch x padded-seq for prefill buckets, batch for decode buckets).
+
+    ``train=True`` additionally pre-plans both *backward* shapes of each
+    projection (``decision.backward_shapes``), so one warm pass at
+    ``buckets=[batch * seq]`` makes a whole jitted train step — forward and
+    planned custom-VJP backward — trace against a hot plan cache.
     """
     cfg = _resolve(cfg)
     dtype = dtype or str(getattr(arch, "dtype", "bfloat16"))
@@ -333,7 +355,208 @@ def warm_buckets(cfg: FalconConfig | None, arch, buckets,
             plan(M, K, N, cfg, dtype)
             plan(M, K, N, cfg, dtype, precombined_b=True)
             n += 2
+            if train:
+                for (Mb, Kb, Nb) in backward_shapes(M, K, N):
+                    plan(Mb, Kb, Nb, cfg, dtype)
+                    n += 1
     return n
+
+
+# ---------------------------------------------------------------------------
+# Planned autodiff: the custom-VJP dispatch core
+#
+# ``jax.value_and_grad`` through the raw combine/R-GEMM/combine graph
+# differentiates the *implementation*: the autodiff transpose of the combine
+# pipeline is strictly worse than either a planned LCMA or a clean GEMM, and
+# the two backward GEMMs (dA = g Bᵀ, dW = Aᵀ g — two-thirds of training
+# FLOPs) never meet the Decision Module. The custom VJP below differentiates
+# the *contraction*: forward runs the planned dispatch, backward computes dA
+# and dB as two independently planned falcon contractions — each backward
+# shape runs through plan(), the plan cache and the backend registry exactly
+# like a forward call. Side effect: every backend becomes trainable (the
+# Pallas kernel pipeline has no autodiff transpose of its own).
+# ---------------------------------------------------------------------------
+
+def _dispatch2d(a2: jnp.ndarray, b2: jnp.ndarray,
+                cfg: FalconConfig) -> jnp.ndarray:
+    """Forward-only planned 2-D contraction: plan(), then LCMA or GEMM."""
+    M, K = a2.shape
+    N = b2.shape[1]
+    d = plan(M, K, N, cfg, str(a2.dtype))
+    if d.use_lcma:
+        return _lcma_apply(a2, b2, d.algo, cfg)
+    return jnp.matmul(a2, b2)
+
+
+@functools.lru_cache(maxsize=None)
+def _planned_core(cfg: FalconConfig):
+    """The custom-VJP planned matmul core for ``cfg`` (2-D operands).
+
+    Cached per (frozen, hashable) config so repeated traces reuse one
+    ``custom_vjp`` instance — jit caches then key on a stable callable.
+    vmap-compatible: ``dot_general`` maps it over batch dims, and plan()
+    inside sees the per-element 2-D shapes it should price.
+    """
+
+    @jax.custom_vjp
+    def core(a2, b2):
+        return _dispatch2d(a2, b2, cfg)
+
+    def fwd(a2, b2):
+        # This rule only runs under differentiation, so backward-shape
+        # pricing happens exactly when a backward pass will exist — a
+        # pure-inference trace never pays it (and never pollutes a warmed
+        # serving plan cache with dA/dB entries).
+        plan_training(a2.shape[0], a2.shape[1], b2.shape[1], cfg,
+                      str(a2.dtype))
+        return _dispatch2d(a2, b2, cfg), (a2, b2)
+
+    def bwd(res, g):
+        a2, b2 = res
+        # dA: (M, N) @ (N, K) and dB: (K, M) @ (M, N) — both re-enter the
+        # planned dispatch; their shapes were pre-priced by plan_training at
+        # trace time, so these plan() calls are cache hits.
+        da = _dispatch2d(g, b2.T, cfg).astype(a2.dtype)
+        db = _dispatch2d(a2.T, g, cfg).astype(b2.dtype)
+        return da, db
+
+    core.defvjp(fwd, bwd)
+    return core
+
+
+def _route_planned(M: int, K: int, N: int, cfg: FalconConfig, dtype: str):
+    """Routing decision for one contraction: (use_custom_vjp_core, d_fwd).
+
+    The core is engaged when the forward picks an LCMA; backward shapes are
+    priced lazily, inside the custom VJP's fwd rule, which jax invokes only
+    under differentiation — a pure-inference trace (the serve engine's
+    warmed hot path) never prices dA/dB and keeps its zero-cold-miss
+    guarantee. When the forward is plain GEMM the caller keeps its
+    bitwise-identical jnp/lax lowering, whose autodiff transpose is plain
+    GEMM anyway — and forward-mode jvp keeps working there.
+    """
+    d = plan(M, K, N, cfg, dtype)
+    return (cfg.planned_vjp and d.use_lcma), d
+
+
+# -- trainable PlannedWeight -------------------------------------------------
+
+def _pw_primal(x2: jnp.ndarray, bt: jnp.ndarray, l: LCMA, n_logical: int,
+               cfg: FalconConfig) -> jnp.ndarray:
+    """The precombined-B̃ serving apply (backend native path or generated)."""
+    be = backends.get_backend(cfg.backend)
+    if be.apply_precombined is not None:
+        return be.apply_precombined(x2, bt, l, n_logical, cfg)
+    return matmul_with_precombined(x2, bt, l, n_logical, cfg)
+
+
+def _pw_bwd_rotated(x2, bt, g, l: LCMA, cfg: FalconConfig):
+    """Exact LCMA-structured backward against B̃ alone (raw weight dropped).
+
+    With H_r = Ãt_r B̃t_r and C[i,j] = Σ_r W[r,i,j] H_r, the cotangents are
+
+        G̃t_r  = Σ_ij W[r,i,j] G[i,j]            (Combine with W coefficients)
+        dX[i,l] = Σ_r U[r,i,l] (G̃t_r B̃t_rᵀ)     (R batched GEMMs, Combine U)
+        dB̃t_r  = Ãt_rᵀ G̃t_r                     (R batched GEMMs)
+
+    — the rank-R scheme rotated onto the gradient, reusing the stored B̃.
+    This is exact (the LCMA identity, not an approximation), so training
+    directly on B̃ is sound: the output is linear in B̃.
+    """
+    Mrows, K = x2.shape
+    Ks, Ns = int(bt.shape[1]), int(bt.shape[2])
+    xp = _pad2(x2, l.m, l.k)
+    Ms = xp.shape[0] // l.m
+    gp = _pad2(g, l.m, 1)
+    if gp.shape[1] != l.n * Ns:
+        gp = jnp.pad(gp, ((0, 0), (0, l.n * Ns - gp.shape[1])))
+    U = jnp.asarray(l.U, xp.dtype)
+    W = jnp.asarray(l.W, gp.dtype)
+    G4 = gp.reshape(l.m, Ms, l.n, Ns)
+    Gt = jnp.einsum("rij,ixjz->rxz", W, G4)                    # (R, Ms, Ns)
+    At = jnp.einsum("ril,ixly->rxy", U,
+                    xp.reshape(l.m, Ms, l.k, Ks))              # (R, Ms, Ks)
+    Hb = jnp.einsum("rxz,ryz->rxy", Gt, bt.astype(Gt.dtype))   # G̃t_r B̃t_rᵀ
+    dx = jnp.einsum("ril,rxy->ixly", U.astype(Hb.dtype), Hb) \
+        .reshape(l.m * Ms, l.k * Ks)[:Mrows, :K].astype(x2.dtype)
+    dbt = jnp.einsum("rxy,rxz->ryz", At, Gt).astype(bt.dtype)
+    return dx, dbt
+
+
+@functools.lru_cache(maxsize=None)
+def _pw_core(cfg: FalconConfig, algo: str, n_logical: int, trainable: bool):
+    """custom-VJP core for a PlannedWeight's precombined apply.
+
+    ``trainable=True`` (raw weight kept): the primal consumes ``(x2, w, bt)``
+    — the fast serving path still reads only B̃, but the backward returns the
+    raw-weight cotangent ``dW = x2ᵀ g`` as an independently planned falcon
+    contraction (the Combine-B map is linear, so the B̃ cotangent transposes
+    back to exactly this), plus ``dx = g Wᵀ`` planned likewise. The B̃ leaf
+    gets a zero cotangent; the optimizer trains ``w`` and
+    :func:`refresh_planned_params` re-derives B̃ after each update.
+
+    ``trainable=False`` (``keep_weight=False``): B̃ *is* the parameter; both
+    cotangents come from the rotated rank-R scheme (exact), so B̃ can be
+    trained directly.
+    """
+    l = algorithms.get(algo)
+
+    if trainable:
+        @jax.custom_vjp
+        def core(x2, w, bt):
+            return _pw_primal(x2, bt, l, n_logical, cfg)
+
+        def fwd(x2, w, bt):
+            # runs only under differentiation: price the backward triple
+            # here so inference traces never pay for (or cache) dA/dB plans
+            plan_training(x2.shape[0], x2.shape[1], n_logical, cfg,
+                          str(x2.dtype))
+            return _pw_primal(x2, bt, l, n_logical, cfg), (x2, w, bt)
+
+        def bwd(res, g):
+            x2, w, bt = res
+            dx = _dispatch2d(g, w.T, cfg).astype(x2.dtype)
+            dw = _dispatch2d(x2.T, g, cfg).astype(w.dtype)
+            return dx, dw, jnp.zeros_like(bt)
+
+        core.defvjp(fwd, bwd)
+        return core
+
+    @jax.custom_vjp
+    def core_bt(x2, bt):
+        return _pw_primal(x2, bt, l, n_logical, cfg)
+
+    def fwd_bt(x2, bt):
+        return _pw_primal(x2, bt, l, n_logical, cfg), (x2, bt)
+
+    def bwd_bt(res, g):
+        x2, bt = res
+        return _pw_bwd_rotated(x2, bt, g, l, cfg)
+
+    core_bt.defvjp(fwd_bt, bwd_bt)
+    return core_bt
+
+
+def refresh_planned_params(params):
+    """Re-derive every PlannedWeight's B̃ from its (just-updated) raw weight.
+
+    Planned gradients land on the raw weight (the B̃ cotangent is zero), so
+    after an optimizer step the stored B̃ is stale; Combine B is linear and
+    cheap relative to a train step, so the train steps re-run it here each
+    update. Weights without a raw copy (``keep_weight=False``) train directly
+    on B̃ and pass through. Identity for trees without PlannedWeights.
+    """
+    def refresh(leaf):
+        if not isinstance(leaf, PlannedWeight) or not leaf.precombined \
+                or leaf.w is None:
+            return leaf
+        lc = leaf.lcma
+        bt = precombine_weights(leaf.w, lc) if leaf.w.ndim == 2 else \
+            jax.vmap(lambda wi: precombine_weights(wi, lc))(leaf.w)
+        return dataclasses.replace(leaf, bt=bt)
+
+    return jax.tree_util.tree_map(
+        refresh, params, is_leaf=lambda x: isinstance(x, PlannedWeight))
 
 
 # ---------------------------------------------------------------------------
@@ -342,16 +565,26 @@ def warm_buckets(cfg: FalconConfig | None, arch, buckets,
 
 def matmul(a: jnp.ndarray, b, cfg: FalconConfig | None = None,
            dtype_hint: str | None = None) -> jnp.ndarray:
-    """``a @ b`` with FalconGEMM dispatch. ``a``: (..., M, K), ``b``: (K, N)."""
+    """``a @ b`` with FalconGEMM dispatch. ``a``: (..., M, K), ``b``: (K, N).
+
+    Differentiable end to end: under ``cfg.planned_vjp`` the contraction runs
+    through the custom-VJP core, so ``jax.grad`` computes both backward GEMMs
+    as independently planned falcon contractions.
+    """
     cfg = _resolve(cfg)
     if isinstance(b, PlannedWeight):
         return _apply_planned(a, b, cfg)
     *lead, M, K = a.shape
     K2, N = b.shape
-    assert K == K2, (a.shape, b.shape)
+    if K != K2:
+        raise ValueError(f"matmul: contracting dims differ: "
+                         f"{tuple(a.shape)} @ {tuple(b.shape)}")
     Mflat = int(np.prod(lead)) * M if lead else M
     dtype = dtype_hint or str(a.dtype)
-    d = plan(Mflat, K, N, cfg, dtype)
+    use_core, d = _route_planned(Mflat, K, N, cfg, dtype)
+    if use_core:
+        c = _planned_core(cfg)(a.reshape(Mflat, K) if lead else a, b)
+        return c.reshape(*lead, M, N) if lead else c
     if not d.use_lcma:
         return jnp.matmul(a, b)
     a2 = a.reshape(Mflat, K) if lead else a
@@ -381,10 +614,14 @@ def dot_general(a: jnp.ndarray, b, dimension_numbers,
     Batched and transposed contractions are normalized down to the planned
     2-D core: free/contracting dims are transposed adjacent and flattened to
     a (M, K) x (K, N) problem (vmapped over batch dims), which the Decision
-    Module prices per batch element. When it declines (or an explicit
-    ``preferred_element_type`` asks for non-input accumulation semantics the
-    LCMA combines don't honor), the call lowers to ``lax.dot_general``
-    untouched — bitwise-identical fallback.
+    Module prices per batch element. Under ``cfg.planned_vjp`` an
+    LCMA-routed contraction runs through the custom-VJP core, so
+    ``jax.grad`` backward contractions are independently planned too
+    (backward shapes are priced only under differentiation — inference
+    traces never pay for dA/dB plans). When the Decision Module declines
+    (or an explicit ``preferred_element_type`` asks for non-input
+    accumulation semantics the LCMA combines don't honor), the call lowers
+    to ``lax.dot_general`` untouched — bitwise-identical fallback.
     """
     cfg = _resolve(cfg)
     (ac, bc), (ab, bb) = dimension_numbers
@@ -404,8 +641,10 @@ def dot_general(a: jnp.ndarray, b, dimension_numbers,
     lcma_ok = (M > 0 and N > 0 and K > 0
                and (preferred_element_type is None
                     or jnp.dtype(preferred_element_type) == a.dtype))
-    d = plan(M, K, N, cfg, str(a.dtype)) if lcma_ok else None
-    if d is None or not d.use_lcma:
+    use_core = d = None
+    if lcma_ok:
+        use_core, d = _route_planned(M, K, N, cfg, str(a.dtype))
+    if not use_core and (d is None or not d.use_lcma):
         return jax.lax.dot_general(a, b, dn, precision=precision,
                                    preferred_element_type=preferred_element_type)
     # Normalize: a -> (batch..., free..., contract...), b -> (batch...,
@@ -417,12 +656,13 @@ def dot_general(a: jnp.ndarray, b, dimension_numbers,
     batch_shape = tuple(a.shape[i] for i in ab)
     out_shape = batch_shape + tuple(a.shape[i] for i in a_free) \
         + tuple(b.shape[i] for i in b_free)
+    core = _planned_core(cfg) if use_core \
+        else (lambda x2, y2: _lcma_apply(x2, y2, d.algo, cfg))
     if not ab:
-        c = _lcma_apply(at.reshape(M, K), bt.reshape(K, N), d.algo, cfg)
+        c = core(at.reshape(M, K), bt.reshape(K, N))
         return c.reshape(out_shape)
     Bsz = int(np.prod(batch_shape))
-    c3 = jax.vmap(lambda x2, y2: _lcma_apply(x2, y2, d.algo, cfg))(
-        at.reshape(Bsz, M, K), bt.reshape(Bsz, K, N))
+    c3 = jax.vmap(core)(at.reshape(Bsz, M, K), bt.reshape(Bsz, K, N))
     return c3.reshape(out_shape)
 
 
@@ -533,3 +773,9 @@ class FalconEngine:
 
     def precombine_params(self, params, **kw):
         return precombine_params(params, cfg=self.config, **kw)
+
+    def plan_training(self, M: int, K: int, N: int, dtype: str = "bfloat16"):
+        return plan_training(M, K, N, self.config, dtype)
+
+    def warm_buckets(self, arch, buckets, **kw):
+        return warm_buckets(self.config, arch, buckets, **kw)

@@ -19,8 +19,10 @@ Combine B").
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import logging
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +37,7 @@ from .lcma import LCMA
 log = logging.getLogger(__name__)
 
 __all__ = ["FalconConfig", "falcon_matmul", "falcon_dense", "plan",
-           "precombine_weights", "matmul_with_precombined"]
+           "plan_training", "precombine_weights", "matmul_with_precombined"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +57,11 @@ class FalconConfig:
     # Memoize auto-mode Decisions in the process plan cache (serving hot path
     # re-traces the same shapes; see core/plan_cache.py).
     use_plan_cache: bool = True
+    # Route autodiff through the planned custom-VJP: the backward GEMMs
+    # (dA = g Bᵀ, dB = Aᵀ g) become independently planned falcon contractions
+    # instead of the autodiff transpose of the combine graph. False restores
+    # differentiate-through semantics (and forward-mode jvp support).
+    planned_vjp: bool = True
 
     @property
     def profile(self) -> HardwareProfile:
@@ -66,7 +73,27 @@ class FalconConfig:
         return algorithms.candidates(max_grid=self.max_grid)
 
 
-_warned_shards: set[tuple] = set()
+# Once-per-key warning dedup for non-divisible shard shapes. Bounded: a
+# long-running serve/replan process sees an unbounded stream of distinct
+# (shape, shards) keys, and an ever-growing set is a slow leak — oldest keys
+# are dropped (worst case: a very old shape warns again). Locked: plan() is
+# reached from multiple serve threads, and an unguarded check-then-mutate on
+# the OrderedDict can race into a KeyError.
+_WARNED_SHARDS_MAX = 512
+_warned_shards: "collections.OrderedDict[tuple, None]" = collections.OrderedDict()
+_warned_shards_lock = threading.Lock()
+
+
+def _warn_once_key(key: tuple) -> bool:
+    """True if ``key`` has not warned yet; records it in the bounded LRU."""
+    with _warned_shards_lock:
+        if key in _warned_shards:
+            _warned_shards.move_to_end(key)
+            return False
+        _warned_shards[key] = None
+        if len(_warned_shards) > _WARNED_SHARDS_MAX:
+            _warned_shards.popitem(last=False)
+        return True
 
 
 def _local_shape(M: int, K: int, N: int, cfg: FalconConfig) -> tuple[int, int, int]:
@@ -82,8 +109,7 @@ def _local_shape(M: int, K: int, N: int, cfg: FalconConfig) -> tuple[int, int, i
         raise ValueError(f"FalconConfig.shards must be >= 1, got {cfg.shards}")
     if M % sm or K % sk or N % sn:
         key = (M, K, N, cfg.shards)
-        if key not in _warned_shards:
-            _warned_shards.add(key)
+        if _warn_once_key(key):
             log.warning(
                 "FalconGEMM: shards %s do not divide (M=%d, K=%d, N=%d); "
                 "pricing the rounded-up per-device shard (%d, %d, %d)",
@@ -127,6 +153,25 @@ def plan(M: int, K: int, N: int, cfg: FalconConfig, dtype: str = "bfloat16",
     if cache is not None:
         cache.insert(key, d)
     return d
+
+
+def plan_training(M: int, K: int, N: int, cfg: FalconConfig,
+                  dtype: str = "bfloat16") -> tuple[dec.Decision, dec.Decision,
+                                                    dec.Decision]:
+    """Plan a contraction's forward AND both backward shapes.
+
+    Training runs three falcon contractions per layer: the forward
+    ``(M, K) @ (K, N)`` plus the two gradients ``dA = g Bᵀ`` (rows M,
+    contract N, cols K) and ``dB = Aᵀ g`` (rows K, contract M, cols N).
+    Each goes through the Decision Module and plan cache under its own key,
+    so a training warm pass (``engine.warm_buckets(train=True)`` /
+    ``tools.tune --train``) leaves the whole jitted step plan-cache-hot.
+    Returns ``(d_fwd, d_dA, d_dB)``.
+    """
+    (sa, sb) = dec.backward_shapes(M, K, N)
+    return (plan(M, K, N, cfg, dtype),
+            plan(*sa, cfg, dtype),
+            plan(*sb, cfg, dtype))
 
 
 def _pad2(x: jnp.ndarray, d0: int, d1: int) -> jnp.ndarray:
@@ -233,6 +278,13 @@ def matmul_with_precombined(a: jnp.ndarray, bt: jnp.ndarray, l: LCMA,
     *lead, M, K = a.shape
     a2 = a.reshape(-1, K)
     ap = _pad2(a2, l.m, l.k)
-    assert ap.shape[1] // l.k == bt.shape[1], (ap.shape, bt.shape, l.key)
+    if ap.shape[1] // l.k != bt.shape[1]:
+        # a bare assert here vanished under ``python -O`` and let mismatched
+        # operands flow into the combines, producing garbage instead of a
+        # shape error
+        raise ValueError(
+            f"matmul_with_precombined: activation K={K} (padded "
+            f"{ap.shape[1]}, grid k={l.k}) does not match precombined "
+            f"B̃ {tuple(bt.shape)} for scheme {l.name} {l.key}")
     c = gen.fn(ap, bt)[: a2.shape[0], :n_logical]
     return c.reshape(*lead, M, n_logical) if lead else c

@@ -24,6 +24,34 @@ import numpy as np
 __all__ = ["LCMA", "validate", "apply_reference"]
 
 
+def _check_coefficients(name: str, which: str, arr) -> np.ndarray:
+    """Validate a coefficient tensor at construction (= registry) time.
+
+    Every execution path (codegen, Pallas kernels) bakes coefficients in as
+    small integers; a float listing that silently truncated under the old
+    ``astype(int8)`` computed wrong results without any error. Non-integer
+    values and magnitudes outside the int8 range are rejected here, so a bad
+    scheme fails at registration, not at matmul time.
+    """
+    a = np.asarray(arr)
+    if a.dtype.kind == "f":
+        if not np.all(a == np.round(a)):
+            raise ValueError(
+                f"LCMA {name}: {which} has non-integer coefficients "
+                f"(worst offender: {a.flat[np.argmax(np.abs(a - np.round(a)))]!r}); "
+                f"only integer coefficient tensors are supported")
+        a = np.round(a)
+    elif a.dtype.kind not in "iub":
+        raise ValueError(
+            f"LCMA {name}: {which} has unsupported coefficient dtype {a.dtype}")
+    if np.any(np.abs(a.astype(np.int64)) > 127):
+        raise ValueError(
+            f"LCMA {name}: {which} coefficient magnitude "
+            f"{int(np.max(np.abs(a.astype(np.int64))))} exceeds the supported "
+            f"int8 range")
+    return a.astype(np.int8)
+
+
 @dataclasses.dataclass(frozen=True, eq=False)  # eq=False: identity hash => usable as a jit static arg
 class LCMA:
     """A bilinear matrix-multiplication scheme ``<m,k,n,R,U,V,W>``."""
@@ -38,9 +66,9 @@ class LCMA:
     W: np.ndarray  # (R, m, n) int8
 
     def __post_init__(self):
-        U = np.ascontiguousarray(np.asarray(self.U, dtype=np.int8))
-        V = np.ascontiguousarray(np.asarray(self.V, dtype=np.int8))
-        W = np.ascontiguousarray(np.asarray(self.W, dtype=np.int8))
+        U = np.ascontiguousarray(_check_coefficients(self.name, "U", self.U))
+        V = np.ascontiguousarray(_check_coefficients(self.name, "V", self.V))
+        W = np.ascontiguousarray(_check_coefficients(self.name, "W", self.W))
         object.__setattr__(self, "U", U)
         object.__setattr__(self, "V", V)
         object.__setattr__(self, "W", W)

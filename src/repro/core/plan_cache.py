@@ -208,6 +208,21 @@ class PlanCache:
         with self._lock:
             self._entries.clear()
 
+    def keys(self) -> list[str]:
+        """Snapshot of cached plan keys (LRU order, oldest first).
+
+        Introspection surface for the training warm pass and tests: a key
+        embeds its local shape as ``{M}x{K}x{N}``, so callers can verify that
+        e.g. both backward shapes of a layer were pre-planned."""
+        with self._lock:
+            return list(self._entries)
+
+    def has_shape(self, M: int, K: int, N: int) -> bool:
+        """True if any cached plan was keyed on local shape (M, K, N)."""
+        token = f"|{M}x{K}x{N}|"
+        with self._lock:
+            return any(token in k for k in self._entries)
+
     # -- persistence --------------------------------------------------------
 
     def save(self, path: str | None = None, merge: bool = True) -> str:

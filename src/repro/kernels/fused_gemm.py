@@ -61,7 +61,7 @@ def _fused_kernel(at_ref, bt_ref, out_ref, acc_ref, *, w, grid_y):
                     if c == 0:
                         continue
                     t = acc_ref[r, :, :]
-                    t = t if c > 0 else -t
+                    t = t if c == 1 else (-t if c == -1 else t * c)
                     acc = t if acc is None else acc + t
                 if acc is None:
                     acc = jnp.zeros_like(acc_ref[0])

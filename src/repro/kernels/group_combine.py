@@ -36,7 +36,8 @@ def _combine_kernel(*refs, coeff, nin):
                 if c == 0:
                     continue
                 t = in_refs[i * d2 + l][...]
-                t = t if c > 0 else -t
+                # keep |c|==1 as pure add/sub; scale only true magnitudes
+                t = t if c == 1 else (-t if c == -1 else t * c)
                 acc = t if acc is None else acc + t
         if acc is None:
             acc = jnp.zeros_like(out_ref[r])

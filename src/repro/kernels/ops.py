@@ -32,7 +32,9 @@ def falcon_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, l: LCMA,
     """LCMA matmul via the Pallas kernel pipeline. Handles arbitrary shapes."""
     M, K = a.shape
     K2, N = b.shape
-    assert K == K2
+    if K != K2:
+        raise ValueError(f"falcon_matmul_pallas: contracting dims differ: "
+                         f"{a.shape} @ {b.shape}")
     # Pad to grid multiples. The K pads of A and B coincide (both are
     # (-K) % l.k), so the combined operands stay K-consistent. Tile sizes are
     # chosen on the padded submatrix sizes by the resource planner unless
@@ -65,7 +67,11 @@ def falcon_matmul_pallas_precombined(
     """
     M, K = a.shape
     ap = _pad2(a, l.m, l.k)
-    assert ap.shape[1] // l.k == bt.shape[1], (ap.shape, bt.shape, l.key)
+    if ap.shape[1] // l.k != bt.shape[1]:
+        raise ValueError(
+            f"falcon_matmul_pallas_precombined: activation K={K} (padded "
+            f"{ap.shape[1]}, grid k={l.k}) does not match precombined "
+            f"B̃ {tuple(bt.shape)} for scheme {l.name} {l.key}")
     at = group_combine(ap, l.U, block=block_combine, interpret=interpret)
     cp = fused_gemm_combine_h(at, bt, l.W, block=block_gemm,
                               out_dtype=a.dtype, interpret=interpret)

@@ -44,7 +44,7 @@ def _quant_combine_kernel(*refs, coeff, nin):
                 if c == 0:
                     continue
                 t = in_refs[i * d2 + l][...].astype(jnp.float32)
-                t = t if c > 0 else -t
+                t = t if c == 1 else (-t if c == -1 else t * c)
                 acc = t if acc is None else acc + t
         if acc is None:
             acc = jnp.zeros(q_ref.shape[1:], jnp.float32)
@@ -115,7 +115,7 @@ def _fused_quant_kernel(aq_ref, as_ref, bq_ref, bs_ref, out_ref, acc_ref, *,
                     if c == 0:
                         continue
                     t = acc_ref[r, :, :]
-                    t = t if c > 0 else -t
+                    t = t if c == 1 else (-t if c == -1 else t * c)
                     acc = t if acc is None else acc + t
                 if acc is None:
                     acc = jnp.zeros_like(acc_ref[0])

@@ -15,6 +15,10 @@ does three things:
      profile and persists it next to the profile, so a serving process
      (``repro.launch.serve --plan-cache ...``) starts with zero cold misses.
 
+``--train`` extends both steps to the backward pass: probe shapes gain their
+transposed (dA/dB) variants and the warm grid covers full fwd+bwd shape
+triples, so a planned custom-VJP train step traces against a hot cache.
+
 After tuning, both of these resolve the calibrated numbers:
 
   FalconConfig(hardware="<base>_autotuned")
@@ -59,14 +63,34 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: tiny probe shapes, one rep, reduced "
                          "plan-cache warm grid")
+    ap.add_argument("--train", action="store_true",
+                    help="calibrate + warm for training: probe shapes gain "
+                         "their backward (transposed) variants and the plan "
+                         "cache is warmed with full fwd+dA+dB shape triples")
     args = ap.parse_args(argv)
     if args.quick:
         args.reps, args.warmup = 1, 0
         if args.shape is None:
             args.shape = [(192, 192, 192), (384, 384, 384)]
+    if args.train:
+        # Backward-stage calibration: the bwd GEMMs run the same kernels at
+        # transposed aspect ratios (M,N,K)/(K,M,N), so the fit must see those
+        # shapes too — including when no explicit --shape was given (the
+        # documented invocation), where the probe grid starts from the
+        # autotuner's defaults. Dedup keeps the grid small.
+        from repro.core.autotune import default_probe_shapes
+        from repro.core.decision import backward_shapes
+        if args.shape is None:
+            args.shape = default_probe_shapes(args.backend)
+        seen = set(args.shape)
+        for s in list(args.shape):
+            for sb in backward_shapes(*s):
+                if sb not in seen:
+                    seen.add(sb)
+                    args.shape.append(sb)
 
     from repro.core import autotune, plan_cache
-    from repro.core.falcon_gemm import FalconConfig, plan
+    from repro.core.falcon_gemm import FalconConfig, plan, plan_training
     from repro.core.hardware import get_profile
     from repro.core.workloads import warm_shapes
 
@@ -106,10 +130,15 @@ def main(argv: list[str] | None = None) -> int:
         if args.quick:
             shapes = shapes[:8]
         for (m, k, n) in shapes:
-            d = plan(m, k, n, cfg, dtype=args.warm_dtype)
-            n_lcma += int(d.use_lcma)
+            if args.train:
+                for d in plan_training(m, k, n, cfg, dtype=args.warm_dtype):
+                    n_lcma += int(d.use_lcma)
+            else:
+                d = plan(m, k, n, cfg, dtype=args.warm_dtype)
+                n_lcma += int(d.use_lcma)
         cache.save()
-        print(f"warmed plan cache: {len(cache)} plans "
+        kind = "fwd+bwd triples" if args.train else "plans"
+        print(f"warmed plan cache: {len(cache)} {kind} "
               f"({n_lcma} pick an LCMA) -> {cache_path}")
         print(f"serve with: python -m repro.launch.serve --arch <arch> "
               f"--plan-cache {cache_path}")

@@ -60,7 +60,7 @@ class FaultInjector:
 class TrainLoop:
     def __init__(self, cfg: TrainLoopConfig, train_step: Callable, data,
                  params, opt_state, fault_injector: FaultInjector | None = None,
-                 shardings=None):
+                 shardings=None, warm_fn: Callable | None = None):
         self.cfg = cfg
         self.train_step = train_step
         self.data = data
@@ -68,6 +68,11 @@ class TrainLoop:
         self.opt_state = opt_state
         self.faults = fault_injector
         self.shardings = shardings  # (param_sh, opt_sh) for elastic restore
+        # Optional warm pass (e.g. ``lambda: steps.warm_train(cfg, B, S)``):
+        # pre-plans the fwd+bwd shape triples so the first step's trace —
+        # which compiles the whole planned custom-VJP graph — hits a hot
+        # plan cache instead of enumerating LCMA candidates per contraction.
+        self.warm_fn = warm_fn
         self.ckpt = CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep_checkpoints)
         self.metrics_history: list[dict] = []
         self.stragglers = 0
@@ -101,6 +106,10 @@ class TrainLoop:
 
     # -- main loop ----------------------------------------------------------
     def run(self, start_step: int = 0) -> dict:
+        if self.warm_fn is not None:
+            n_plans = self.warm_fn()
+            log.info("warm pass: %s plans pre-computed before first trace",
+                     n_plans)
         step = start_step
         ema = None
         retries = 0

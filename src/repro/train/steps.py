@@ -24,7 +24,22 @@ from repro.parallel.compression import compressed_psum_mean
 
 __all__ = ["make_train_step", "make_eval_step", "make_prefill_step",
            "make_serve_prefill_step", "make_decode_step",
-           "make_compressed_dp_train_step"]
+           "make_compressed_dp_train_step", "warm_train"]
+
+
+def warm_train(cfg: ModelConfig, batch: int, seq: int) -> int:
+    """Pre-plan the forward AND backward shapes of every projection in
+    ``cfg`` at M = batch x seq tokens.
+
+    Run once before jitting a train step: tracing then resolves every
+    Decision-Module query — the forward contractions and the custom-VJP
+    backward pair of each layer — from a hot plan cache, so the whole step
+    compiles without a single cold candidate enumeration. Returns the number
+    of ``plan()`` calls issued.
+    """
+    fc = engine.active_config() or M.falcon_config_for(cfg)
+    return engine.warm_buckets(fc, cfg, [batch * seq],
+                               dtype=str(cfg.dtype), train=True)
 
 
 def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
@@ -69,6 +84,11 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
             lr_scale = cosine_schedule(step, warmup, total_steps)
             params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg,
                                                  lr_scale=lr_scale)
+            # Planned params: the optimizer stepped the raw weight (planned
+            # grads land there, the B̃ cotangent is zero) — re-derive B̃ so
+            # the next forward reads a consistent precombined weight.
+            # Identity (and free) for trees without PlannedWeights.
+            params = engine.refresh_planned_params(params)
             out = {"loss": loss, "lr_scale": lr_scale, **metrics, **om}
             return params, opt_state, out
 
@@ -187,6 +207,7 @@ def make_compressed_dp_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh,
             lr_scale = cosine_schedule(step, warmup, total_steps)
             params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg,
                                                  lr_scale=lr_scale)
+            params = engine.refresh_planned_params(params)
             return params, opt_state, {"loss": loss, **om}
 
     return train_step

@@ -33,6 +33,33 @@ def test_dtypes(dtype, rng):
     np.testing.assert_allclose(np.asarray(C, np.float32), ref, rtol=tol, atol=tol)
 
 
+def _mag2_scheme():
+    """<2,2,2>;14 with |c| in {1,2,3}: tensor product of the magnitude-2
+    <1,1,1>;2 scheme with Strassen. Regression scheme for the bug where the
+    combine emitters dropped coefficient magnitude (|c|>1 computed wrong
+    results for AlphaTensor standard-arithmetic / Smirnov-style listings)."""
+    from repro.core.lcma import LCMA, validate
+    base = LCMA("mag2-111", 1, 1, 1, 2,
+                np.array([[[2]], [[1]]], np.int8),
+                np.array([[[2]], [[1]]], np.int8),
+                np.array([[[1]], [[-3]]], np.int8))
+    l = alg.tensor_product(base, alg.strassen(), "mag2-222")
+    assert validate(l)
+    return l
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_generated_honors_coefficient_magnitude(fused, rng):
+    l = _mag2_scheme()
+    assert int(np.abs(l.U).max()) > 1  # the regression precondition
+    g = codegen.generate(l, codegen.CodegenOptions(fused=fused))
+    M, K, N = l.m * 8, l.k * 8, l.n * 8
+    A = rng.integers(-4, 4, (M, K)).astype(np.float32)
+    B = rng.integers(-4, 4, (K, N)).astype(np.float32)
+    C = np.asarray(jax.jit(g.fn)(A, B))
+    np.testing.assert_array_equal(C, A @ B)  # integer inputs => exact
+
+
 def test_source_has_no_runtime_coefficients():
     """Coefficients must be compile-time constants (constant-folded +/-)."""
     g = codegen.generate(alg.get("strassen"))

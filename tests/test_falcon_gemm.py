@@ -74,3 +74,38 @@ def test_pallas_backend_agrees(rng):
     got = falcon_matmul(A, B, cfg)
     np.testing.assert_allclose(np.asarray(got), np.asarray(A) @ np.asarray(B),
                                rtol=2e-4, atol=2e-4)
+
+
+def test_precombined_shape_mismatch_raises(rng):
+    """Operand validation must survive ``python -O`` (was a bare assert)."""
+    import pytest
+
+    l = alg.get("strassen")
+    W = jnp.asarray(rng.standard_normal((30, 27)), jnp.float32)
+    bt = precombine_weights(W, l)
+    A = jnp.asarray(rng.standard_normal((4, 40)), jnp.float32)  # wrong K
+    with pytest.raises(ValueError, match="does not match precombined"):
+        matmul_with_precombined(A, bt, l, n_logical=27)
+
+
+def test_matmul_shape_mismatch_raises(rng):
+    import pytest
+
+    from repro.core import engine
+    with pytest.raises(ValueError, match="contracting dims differ"):
+        engine.matmul(jnp.ones((4, 8)), jnp.ones((9, 4)), CFG_FORCE)
+
+
+def test_warned_shards_is_bounded():
+    """The once-per-key warning dedup must not leak in long-running serve
+    processes: one entry per distinct shape x shards, capped."""
+    from repro.core import falcon_gemm as fg
+
+    fg._warned_shards.clear()
+    cfg = FalconConfig(mode="gemm", shards=(3, 1, 1))
+    for i in range(fg._WARNED_SHARDS_MAX + 64):
+        plan(3 * i + 1, 16, 16, cfg)     # never divisible by 3 => warns
+    assert len(fg._warned_shards) <= fg._WARNED_SHARDS_MAX
+    # most-recent keys are retained, oldest evicted
+    assert (3 * (fg._WARNED_SHARDS_MAX + 63) + 1, 16, 16, (3, 1, 1)) \
+        in fg._warned_shards

@@ -41,6 +41,41 @@ def test_fused_gemm_blocks(name, blocks, rng):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
 
 
+def _mag2_scheme():
+    """<2,2,2>;14 with |c| in {1,2,3} — kernel regression for dropped
+    coefficient magnitude (``t if c > 0 else -t`` silently mapped 2 -> 1)."""
+    from repro.core.lcma import LCMA, validate
+    base = LCMA("mag2-111", 1, 1, 1, 2,
+                np.array([[[2]], [[1]]], np.int8),
+                np.array([[[2]], [[1]]], np.int8),
+                np.array([[[1]], [[-3]]], np.int8))
+    l = alg.tensor_product(base, alg.strassen(), "mag2-222")
+    assert validate(l)
+    return l
+
+
+def test_group_combine_honors_coefficient_magnitude(rng):
+    l = _mag2_scheme()
+    X, Y = 16, 16
+    x = jnp.asarray(rng.integers(-4, 4, (l.m * X, l.k * Y)), jnp.float32)
+    got = group_combine(x, l.U, block=(8, 8), interpret=True)
+    parts = x.reshape(l.m, X, l.k, Y).transpose(0, 2, 1, 3)
+    want = ref.group_combine_ref(parts, l.U)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pallas_pipeline_honors_coefficient_magnitude(rng):
+    """Full kernel pipeline (Combine A/B + fused GEMM/Combine H) stays exact
+    on integer inputs for a |c|=2 scheme — exercises the magnitude paths in
+    both group_combine and the fused Combine-H kernel."""
+    l = _mag2_scheme()
+    A = jnp.asarray(rng.integers(-3, 3, (24, 20)), jnp.float32)
+    B = jnp.asarray(rng.integers(-3, 3, (20, 28)), jnp.float32)
+    got = ops.falcon_matmul_pallas(A, B, l, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(A, np.float64) @ np.asarray(B, np.float64))
+
+
 @given(st.integers(1, 5), st.integers(1, 5), st.integers(1, 5),
        st.sampled_from(["strassen", "laderman"]))
 @settings(max_examples=10, deadline=None)

@@ -48,6 +48,57 @@ def test_invalid_scheme_rejected():
     assert not validate(bad)
 
 
+def _mag2_111() -> LCMA:
+    """Valid <1,1,1>;2 scheme with |c| in {1, 2, 3}: C = (2A)(2B) - 3(AB)."""
+    return LCMA("mag2-111", 1, 1, 1, 2,
+                np.array([[[2]], [[1]]], np.int8),
+                np.array([[[2]], [[1]]], np.int8),
+                np.array([[[1]], [[-3]]], np.int8))
+
+
+def test_magnitude_coefficients_validate_and_apply(rng):
+    """Schemes with |c| > 1 (AlphaTensor standard-arithmetic / Smirnov
+    listings) are first-class: the identity holds and the reference apply
+    honors coefficient magnitude."""
+    l = _mag2_111()
+    assert validate(l)
+    big = alg.tensor_product(l, alg.strassen(), "mag2-222")
+    assert validate(big)
+    A = rng.integers(-8, 8, (big.m * 3, big.k * 3)).astype(np.float64)
+    B = rng.integers(-8, 8, (big.k * 3, big.n * 3)).astype(np.float64)
+    np.testing.assert_array_equal(apply_reference(big, A, B), A @ B)
+
+
+def test_non_integer_coefficients_rejected():
+    U = np.array([[[0.5]]], np.float64)
+    with pytest.raises(ValueError, match="non-integer"):
+        LCMA("halfs", 1, 1, 1, 1, U, U, U)
+
+
+def test_out_of_range_coefficients_rejected():
+    U = np.array([[[300]]], np.int32)
+    ok = np.array([[[1]]], np.int8)
+    with pytest.raises(ValueError, match="int8 range"):
+        LCMA("huge", 1, 1, 1, 1, U, ok, ok)
+
+
+def test_register_validates_and_guards_names():
+    l = _mag2_111()
+    try:
+        alg.register(l)
+        assert alg.get(l.name) is l
+        with pytest.raises(ValueError, match="already registered"):
+            alg.register(l)
+    finally:
+        alg.unregister(l.name)
+    s = alg.strassen()
+    bad_w = s.W.copy()
+    bad_w[0, 0, 0] += 1
+    with pytest.raises(ValueError, match="tensor identity"):
+        alg.register(LCMA("bad-reg", 2, 2, 2, 7, s.U, s.V, bad_w))
+    assert "bad-reg" not in alg.library()
+
+
 @given(st.sampled_from(["strassen", "s223", "laderman"]),
        st.sampled_from(["strassen", "s322"]))
 @settings(max_examples=8, deadline=None)

@@ -69,3 +69,25 @@ def test_int8_error_comparable_to_plain_int8_gemm(rng):
     C = np.asarray(cp.transpose(0, 2, 1, 3).reshape(M, N))
     e_lcma = np.linalg.norm(C - ref_c) / np.linalg.norm(ref_c)
     assert e_lcma < 4 * e_plain + 1e-4, (e_lcma, e_plain)
+
+
+def test_quant_combine_honors_coefficient_magnitude(rng):
+    """|c|=2 scheme through the quantized Combine-A: the f32 pre-quantization
+    accumulator must scale by the coefficient magnitude (regression for the
+    ``t if c > 0 else -t`` bug that mapped every |c| to 1)."""
+    from repro.core.lcma import LCMA, validate
+
+    base = LCMA("mag2-111", 1, 1, 1, 2,
+                np.array([[[2]], [[1]]], np.int8),
+                np.array([[[2]], [[1]]], np.int8),
+                np.array([[[1]], [[-3]]], np.int8))
+    l = alg.tensor_product(base, alg.strassen(), "mag2-222")
+    assert validate(l)
+    X, Y, by = 16, 32, 16
+    x = jnp.asarray(rng.standard_normal((l.m * X, l.k * Y)), jnp.float32)
+    q, s = group_combine_quant(x, l.U, block=(16, by), interpret=True)
+    deq = q.astype(jnp.float32) * jnp.repeat(s, by, axis=2)
+    want = group_combine(x, l.U, block=(16, 16), interpret=True)
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(want),
+                               atol=scale / 127 * 1.01)
