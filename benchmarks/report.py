@@ -152,6 +152,14 @@ def to_metrics(results: dict) -> dict:
             r["planned_over_through"], "x")
         m[f"train_bwd.bwd_planned_frac_n{r['n']}"] = _metric(
             r["bwd_planned_frac"], "frac")
+    for r in results.get("moe_grouped") or []:
+        key = f"E{r['E']}_C{r['C']}_K{r['K']}_N{r['N']}"
+        m[f"moe_grouped.grouped_gflops_{key}"] = _metric(
+            r["grouped_gflops"], "GFLOPS")
+        m[f"moe_grouped.grouped_over_vmap_{key}"] = _metric(
+            r["grouped_over_vmap"], "x")
+        m[f"moe_grouped.combine_hoist_frac_{key}"] = _metric(
+            r["combine_hoist_frac"], "frac")
     for r in results.get("precision") or []:
         m[f"precision.fused_rel_err_{r['algo']}_n{r['n']}"] = _metric(
             r["fused_rel_err"], "rel_err", higher_is_better=False)

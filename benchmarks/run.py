@@ -20,8 +20,8 @@ import traceback
 
 
 def _sections(quick: bool):
-    from . import (e2e_llm, operator_level, plan_cache, precision,
-                   roofline_fig8, serve_bench, stepwise, train_bwd)
+    from . import (e2e_llm, moe_grouped, operator_level, plan_cache,
+                   precision, roofline_fig8, serve_bench, stepwise, train_bwd)
 
     return [
         ("operator_level",
@@ -48,6 +48,11 @@ def _sections(quick: bool):
         ("train_bwd",
          "Planned custom-VJP backward pass vs differentiate-through",
          lambda: train_bwd.run(sizes=(256, 512) if quick else (512, 1024))),
+        ("moe_grouped",
+         "Grouped batched LCMA: grouped vs vmap vs eager (MoE expert shapes)",
+         lambda: moe_grouped.run(
+             shapes=((8, 128, 256, 512),) if quick
+             else ((8, 128, 256, 512), (8, 256, 512, 512)))),
         ("precision",
          "IV-F numerical precision: fused vs downcast-H",
          lambda: precision.run(sizes=(64, 128) if quick else (64, 128, 256))),

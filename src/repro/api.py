@@ -26,18 +26,24 @@ from repro.core.backends import (Backend, available_backends, get_backend,
 from repro.core.decision import backward_shapes
 from repro.core.engine import (FalconEngine, PlannedWeight, active_config,
                                current_config, dense, dot_general, einsum,
-                               matmul, plan_weight, precombine_params,
+                               grouped_expert_shapes, grouped_matmul, matmul,
+                               plan_weight, precombine_params,
                                projection_shapes, refresh_planned_params, use,
                                warm_buckets)
 from repro.core.falcon_gemm import (FalconConfig, falcon_dense, falcon_matmul,
+                                    grouped_matmul_with_precombined,
                                     matmul_with_precombined, plan,
-                                    plan_training, precombine_weights)
+                                    plan_batched, plan_training,
+                                    precombine_weights)
 
 __all__ = [
     # context-scoped config
     "use", "current_config", "active_config", "FalconConfig", "FalconEngine",
     # dispatch entry points
     "dense", "matmul", "dot_general", "einsum", "plan",
+    # grouped batched dispatch (group-parallel execution)
+    "grouped_matmul", "plan_batched", "grouped_expert_shapes",
+    "grouped_matmul_with_precombined",
     # planned training (custom-VJP backward)
     "plan_training", "backward_shapes", "refresh_planned_params",
     # precombined weights (offline Combine B)

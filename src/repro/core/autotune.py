@@ -84,6 +84,11 @@ class ProbeMeasurement:
     flops_mul_est: float
     beta_est: float
     eff_est: float
+    # (G*R)-batched grouped GEMM stage vs one big GEMM — validates the
+    # decision model's eff_B amortization law (``estimate_grouped``); None
+    # when the grouped probe is skipped (group_size <= 1)
+    eff_grouped_est: float | None = None
+    group_size: int = 1
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -100,6 +105,11 @@ class CalibrationReport:
     # per-probe relative error of the calibrated model's predicted LCMA
     # pipeline time vs the measured pipeline (empty when validation skipped)
     model_rel_err: list[float]
+    # measured (G*R)-batched grouped-stage efficiency (median over probes)
+    # vs the eff_B amortization law the grouped decision model assumes —
+    # None when the grouped probe was skipped
+    eff_grouped: float | None = None
+    eff_grouped_predicted: float | None = None
 
     @property
     def max_rel_err(self) -> float | None:
@@ -111,6 +121,8 @@ class CalibrationReport:
             "scheme": self.scheme,
             "probes": [p.as_dict() for p in self.probes],
             "model_rel_err": self.model_rel_err,
+            "eff_grouped": self.eff_grouped,
+            "eff_grouped_predicted": self.eff_grouped_predicted,
         }
 
 
@@ -120,7 +132,8 @@ def _combine_bytes(l: LCMA, Mp: int, Kp: int, itemsize: int) -> int:
 
 
 def _measure_probe(M: int, K: int, N: int, l: LCMA, backend: str, dtype: str,
-                   timer: Callable, validate: bool) -> ProbeMeasurement:
+                   timer: Callable, validate: bool,
+                   group_size: int = 1) -> ProbeMeasurement:
     import jax
     import jax.numpy as jnp
 
@@ -175,8 +188,24 @@ def _measure_probe(M: int, K: int, N: int, l: LCMA, backend: str, dtype: str,
     beta = _combine_bytes(l, Mp, Kp, itemsize) / t_comb
     batched_flops = 2.0 * l.R * X * Ks * Z / t_bat
     eff = min(batched_flops / flops_mul, 1.0)
+    eff_grouped = None
+    if group_size > 1 and backend not in ("pallas", "pallas_interpret"):
+        # Grouped stage: G groups of R products as ONE (G*R)-batched GEMM —
+        # the Execution Module's group-parallel lowering. Measured relative
+        # to the big GEMM it validates the eff_B amortization law used by
+        # decision.estimate_grouped (jnp backend only: the Pallas grouped
+        # kernel adds a grid dim, not a bigger dot_general).
+        G = int(group_size)
+        ag = jnp.ones((G * l.R, X, Ks), jdt)
+        bg = jnp.ones((G * l.R, Ks, Z), jdt)
+        gmm = jax.jit(lambda x, y: jax.lax.dot_general(
+            x, y, (((2,), (1,)), ((0,), (0,)))))
+        t_grp = timer(gmm, ag, bg)
+        eff_grouped = min(2.0 * G * l.R * X * Ks * Z / t_grp / flops_mul, 1.0)
     return ProbeMeasurement(M, K, N, dtype, t_gemm, t_comb, t_bat, t_pipe,
-                            flops_mul, beta, eff)
+                            flops_mul, beta, eff,
+                            eff_grouped_est=eff_grouped,
+                            group_size=int(group_size))
 
 
 def autotune(base: str | HardwareProfile = "cpu_host", backend: str = "jnp",
@@ -184,7 +213,7 @@ def autotune(base: str | HardwareProfile = "cpu_host", backend: str = "jnp",
              dtype: str = "float32", scheme: str = "strassen",
              reps: int = 3, warmup: int = 1,
              timer: Callable | None = None, name: str | None = None,
-             validate: bool = True) -> CalibrationReport:
+             validate: bool = True, group_size: int = 4) -> CalibrationReport:
     """Measure the backend on probe shapes and fit a calibrated profile.
 
     Returns a :class:`CalibrationReport`; ``report.profile`` is registered
@@ -198,7 +227,8 @@ def autotune(base: str | HardwareProfile = "cpu_host", backend: str = "jnp",
     timer = timer or best_of_timer(reps=reps, warmup=warmup)
     l = algorithms.get(scheme)
 
-    probes = [_measure_probe(M, K, N, l, backend, dtype, timer, validate)
+    probes = [_measure_probe(M, K, N, l, backend, dtype, timer, validate,
+                             group_size=group_size)
               for (M, K, N) in shapes]
 
     flops_mul = statistics.median(p.flops_mul_est for p in probes)
@@ -224,9 +254,29 @@ def autotune(base: str | HardwareProfile = "cpu_host", backend: str = "jnp",
         pred = dec.lcma_time(l, p.M, p.N, p.K, prof, dtype=dtype)
         rel_err.append(abs(pred - p.t_pipeline) / p.t_pipeline)
 
+    # Validate the grouped decision model against the grouped-stage probe:
+    # eff_B = B*eff/(B*eff + 1 - eff) should track the measured (G*R)-batched
+    # efficiency. A large gap means grouped decisions on this host deserve a
+    # second look (the report records both; tune CLI prints them).
+    eff_grouped = eff_grouped_pred = None
+    grouped_meas = [p.eff_grouped_est for p in probes
+                    if p.eff_grouped_est is not None]
+    if grouped_meas:
+        eff_grouped = statistics.median(grouped_meas)
+        G = next(p.group_size for p in probes if p.eff_grouped_est is not None)
+        eff_grouped_pred = G * eff / (G * eff + 1.0 - eff)
+        if abs(eff_grouped - eff_grouped_pred) > 0.25:
+            import logging
+            logging.getLogger(__name__).warning(
+                "autotune: grouped GEMM stage measured %.2f efficiency vs "
+                "eff_B model prediction %.2f (G=%d, eff=%.2f) — grouped "
+                "decisions may be mispriced on this backend",
+                eff_grouped, eff_grouped_pred, G, eff)
+
     return CalibrationReport(base=base_prof.name, backend=backend, dtype=dtype,
                              scheme=scheme, probes=probes, profile=prof,
-                             model_rel_err=rel_err)
+                             model_rel_err=rel_err, eff_grouped=eff_grouped,
+                             eff_grouped_predicted=eff_grouped_pred)
 
 
 def calibrate(path: str | None = None, block_plan_shapes: bool = True,

@@ -35,6 +35,14 @@ DenseHookFn = Callable
 # offline-combined B̃ (R, K/k, N/n) — the PlannedWeight serving path. None
 # means "no native path"; dispatch falls back to the generated jnp combines.
 ApplyPrecombinedFn = Callable
+# apply_grouped(a3, b, lcma, cfg) -> C3 : execute a grouped batched LCMA —
+# a3 (G, M, K) against b (K, N) (shared; Combine B hoisted once) or
+# (G, K, N) (per-group). None falls back to the generated grouped lowering.
+ApplyGroupedFn = Callable
+# apply_grouped_precombined(a3, bt, lcma, n_logical, cfg) -> C3 : grouped
+# serving path against precombined B̃ (R, K/k, N/n) or stacked
+# (G, R, K/k, N/n) — the stacked-PlannedWeight / MoE-expert case.
+ApplyGroupedPrecombinedFn = Callable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +53,8 @@ class Backend:
     apply: ApplyFn
     dense_hook: DenseHookFn | None = None
     apply_precombined: ApplyPrecombinedFn | None = None
+    apply_grouped: ApplyGroupedFn | None = None
+    apply_grouped_precombined: ApplyGroupedPrecombinedFn | None = None
     description: str = ""
 
 
@@ -54,18 +64,24 @@ _LOCK = threading.Lock()
 
 def register_backend(name: str, impl, *, dense_hook: DenseHookFn | None = None,
                      apply_precombined: ApplyPrecombinedFn | None = None,
+                     apply_grouped: ApplyGroupedFn | None = None,
+                     apply_grouped_precombined: ApplyGroupedPrecombinedFn | None = None,
                      description: str = "", overwrite: bool = False) -> Backend:
     """Register an execution backend under ``name``.
 
     ``impl`` is either a callable ``(a2, b, lcma, cfg) -> C`` or a ready-made
     :class:`Backend`. Re-registering an existing name requires
     ``overwrite=True`` (guards against accidental shadowing of built-ins).
+    Backends without the optional grouped hooks still serve grouped batched
+    dispatch — the engine falls back to the generated grouped lowering.
     """
     if isinstance(impl, Backend):
         be = dataclasses.replace(impl, name=name)
     elif callable(impl):
         be = Backend(name=name, apply=impl, dense_hook=dense_hook,
                      apply_precombined=apply_precombined,
+                     apply_grouped=apply_grouped,
+                     apply_grouped_precombined=apply_grouped_precombined,
                      description=description)
     else:
         raise TypeError(f"register_backend: impl must be callable or Backend, "
@@ -121,6 +137,16 @@ def _jnp_apply_precombined(a2, bt, l, n_logical, cfg):
     return matmul_with_precombined(a2, bt, l, n_logical, cfg)
 
 
+def _jnp_apply_grouped(a3, b, l, cfg):
+    from .falcon_gemm import grouped_matmul_generated
+    return grouped_matmul_generated(a3, b, l, cfg)
+
+
+def _jnp_apply_grouped_precombined(a3, bt, l, n_logical, cfg):
+    from .falcon_gemm import grouped_matmul_with_precombined
+    return grouped_matmul_with_precombined(a3, bt, l, n_logical, cfg)
+
+
 def _pallas_apply_factory(interpret: bool):
     def apply(a2, b, l, cfg):
         from repro.kernels import ops
@@ -134,6 +160,21 @@ def _pallas_precombined_factory(interpret: bool):
         return ops.falcon_matmul_pallas_precombined(
             a2, bt, l, n_logical, interpret=interpret)
     return apply_precombined
+
+
+def _pallas_grouped_factory(interpret: bool):
+    def apply_grouped(a3, b, l, cfg):
+        from repro.kernels import ops
+        return ops.falcon_grouped_matmul_pallas(a3, b, l, interpret=interpret)
+    return apply_grouped
+
+
+def _pallas_grouped_precombined_factory(interpret: bool):
+    def apply_grouped_precombined(a3, bt, l, n_logical, cfg):
+        from repro.kernels import ops
+        return ops.falcon_grouped_matmul_pallas_precombined(
+            a3, bt, l, n_logical, interpret=interpret)
+    return apply_grouped_precombined
 
 
 def _shardmap_dense_hook(x, w, cfg):
@@ -152,19 +193,27 @@ def _ensure_builtins() -> None:
             "jnp": Backend(
                 "jnp", _jnp_apply,
                 apply_precombined=_jnp_apply_precombined,
+                apply_grouped=_jnp_apply_grouped,
+                apply_grouped_precombined=_jnp_apply_grouped_precombined,
                 description="generated pure-JAX combines (GSPMD-shardable)"),
             "pallas": Backend(
                 "pallas", _pallas_apply_factory(False),
                 apply_precombined=_pallas_precombined_factory(False),
+                apply_grouped=_pallas_grouped_factory(False),
+                apply_grouped_precombined=_pallas_grouped_precombined_factory(False),
                 description="on-TPU Pallas kernel pipeline"),
             "pallas_interpret": Backend(
                 "pallas_interpret", _pallas_apply_factory(True),
                 apply_precombined=_pallas_precombined_factory(True),
+                apply_grouped=_pallas_grouped_factory(True),
+                apply_grouped_precombined=_pallas_grouped_precombined_factory(True),
                 description="Pallas pipeline in interpret mode (CPU CI)"),
             "shard_map_local": Backend(
                 "shard_map_local", _jnp_apply,
                 dense_hook=_shardmap_dense_hook,
                 apply_precombined=_jnp_apply_precombined,
+                apply_grouped=_jnp_apply_grouped,
+                apply_grouped_precombined=_jnp_apply_grouped_precombined,
                 description="LCMA on the per-device local matmul inside "
                             "shard_map (fsdp_only)"),
         }

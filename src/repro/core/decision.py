@@ -30,9 +30,11 @@ from . import algorithms
 from .hardware import HardwareProfile, get_profile
 from .lcma import LCMA
 
-__all__ = ["StageCost", "LCMAEstimate", "Decision", "gemm_time", "lcma_time",
-           "estimate", "decide", "eq8_is_memory_bound", "eq10_profitable",
-           "effective_tflops", "backward_shapes"]
+__all__ = ["StageCost", "LCMAEstimate", "Decision", "GroupedDecision",
+           "gemm_time", "lcma_time", "estimate", "decide",
+           "eq8_is_memory_bound", "eq10_profitable", "effective_tflops",
+           "backward_shapes", "gemm_time_batched", "estimate_grouped",
+           "decide_batched", "batched_is_memory_bound"]
 
 
 def backward_shapes(M: int, K: int, N: int) -> tuple[tuple[int, int, int],
@@ -107,6 +109,26 @@ class Decision:
     @property
     def seconds(self) -> float:
         return self.lcma_seconds if self.use_lcma else self.gemm_seconds
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedDecision(Decision):
+    """A Decision for a grouped batched contraction ``B x [(M, K) @ (K, N)]``.
+
+    ``M/N/K`` are the *per-group-element* shape; ``B`` is the group size.
+    ``shared_b=True`` marks the broadcast-B case (one (K, N) operand shared by
+    every group element — attention weights, PlannedWeights, any ``vmap`` with
+    a closed-over matrix): Combine B is then priced ONCE for the whole group
+    (the paper's Group-Parallel amortization), not B times.
+    """
+
+    B: int = 1
+    shared_b: bool = False
+
+    @property
+    def hoists_combine_b(self) -> bool:
+        """True when the grouped lowering runs Combine B once for the group."""
+        return self.use_lcma and self.shared_b and self.B > 1
 
 
 _DTYPE_BYTES = {"float64": 8, "float32": 4, "bfloat16": 2, "float16": 2,
@@ -237,6 +259,137 @@ def decide(M: int, N: int, K: int, hw: HardwareProfile | str, dtype: str = "bflo
     if best is not None and best.time * min_speedup < t_gemm:
         return Decision(M, N, K, dtype, best.lcma, t_gemm, best.time, ests)
     return Decision(M, N, K, dtype, None, t_gemm, None, ests)
+
+
+# ---------------------------------------------------------------------------
+# Group-parallel batched pricing (paper §III-B Group-Parallel Optimizations)
+#
+# A grouped contraction is B independent (M, K) @ (K, N) products executed as
+# ONE planned unit: per-element Combine A, Combine B either hoisted (shared
+# operand) or per element, and a single (B*R)-batched intermediate GEMM.
+# Pricing the group as a whole — instead of vmapping a per-element Decision —
+# is what lets LCMA overhead amortize across the batch: the per-element
+# problem may be memory-bound (Eq. 8 declines) while the grouped problem,
+# with Combine-B hoisted and the R*B products batched, is not.
+# ---------------------------------------------------------------------------
+
+def gemm_time_batched(B: int, M: int, N: int, K: int,
+                      hw: HardwareProfile | str, dtype: str = "bfloat16",
+                      shared_b: bool = False) -> float:
+    """Roofline time of the batched-GEMM baseline for a grouped contraction.
+
+    ``shared_b`` models the broadcast-B baseline (one weight read for the
+    whole group) so the LCMA-vs-GEMM comparison stays apples-to-apples.
+    """
+    hw = _resolve_hw(hw)
+    by = _dtype_bytes(dtype)
+    nb = 1 if shared_b else B
+    flops = 2.0 * B * M * N * K
+    mem = (B * (M * K + M * N) + nb * K * N) * by
+    return max(flops / hw.flops_for(dtype), mem / hw.beta)
+
+
+def batched_is_memory_bound(B: int, M: int, N: int, K: int,
+                            hw: HardwareProfile | str,
+                            dtype: str = "bfloat16",
+                            shared_b: bool = False) -> bool:
+    """Grouped Eq. 8 guard: a memory-bound batched GEMM admits no LCMA win."""
+    hw = _resolve_hw(hw)
+    by = _dtype_bytes(dtype)
+    nb = 1 if shared_b else B
+    ai = 2.0 * B * M * N * K / ((B * (M * K + M * N) + nb * K * N) * by)
+    return ai <= hw.flops_for(dtype) / hw.beta
+
+
+def estimate_grouped(l: LCMA, B: int, M: int, N: int, K: int,
+                     hw: HardwareProfile | str, dtype: str = "bfloat16",
+                     fused: bool = True, precombined_b: bool = False,
+                     shared_b: bool = False,
+                     pad_multiple: tuple[int, int, int] = (1, 1, 1)) -> LCMAEstimate:
+    """Per-stage cost of one grouped LCMA application (Table II, amortized).
+
+    Relative to ``estimate``: Combine A and the output scale by B; Combine B
+    scales by 1 when the B operand is shared across the group (hoisted — run
+    once, reused B times) and by B otherwise; the GEMM stage is one
+    (B*R)-batched product whose B-side traffic is likewise 1x or Bx. The
+    ``padded_shape`` reported is the per-element one.
+
+    The grouped GEMM stage also amortizes the *launch inefficiency* the
+    autotuner measures: ``lcma_gemm_efficiency`` is calibrated on the
+    R-batched stage (one group), and modelling its shortfall as a fixed
+    per-launch overhead gives the B-group efficiency
+
+        eff_B = B * eff / (B * eff + 1 - eff)
+
+    — eff at B=1, approaching 1 as the R*B products fill the pipeline. This
+    is why a grouped decision can pick an LCMA where pricing one group
+    element (and vmapping) declines.
+    """
+    hw = _resolve_hw(hw)
+    by = _dtype_bytes(dtype)
+    m, k, n, R = l.m, l.k, l.n, l.R
+    Mp = _pad_up(M, m * pad_multiple[0])
+    Kp = _pad_up(K, k * pad_multiple[1])
+    Np = _pad_up(N, n * pad_multiple[2])
+    Ms, Ks, Ns = Mp // m, Kp // k, Np // n
+    nb = 1 if shared_b else B          # Combine-B / B-operand multiplicity
+    Fa = hw.flops_add
+    eff = hw.lcma_gemm_efficiency
+    eff_b = B * eff / (B * eff + 1.0 - eff)
+    Fx = hw.flops_for(dtype) * eff_b
+    stages = []
+
+    def stage(name, flops, nbytes, unit):
+        stages.append(StageCost(name, flops, nbytes, flops / unit, nbytes / hw.beta))
+
+    stage("combine_a", (l.nnz_u - R) * Ms * Ks * B,
+          (Mp * Kp + R * Ms * Ks) * B * by, Fa)
+    if not precombined_b:
+        stage("combine_b", (l.nnz_v - R) * Ks * Ns * nb,
+              (Kp * Np + R * Ks * Ns) * nb * by, Fa)
+    gemm_flops = 2.0 * R * Ms * Ns * Ks * B
+    if fused:
+        gemm_bytes = (B * R * Ms * Ks + nb * R * Ks * Ns + B * Mp * Np) * by
+        stage("gemm+combine_h", gemm_flops, gemm_bytes, Fx)
+    else:
+        gemm_bytes = (B * R * (Ms * Ks + Ms * Ns) + nb * R * Ks * Ns) * by
+        stage("gemm", gemm_flops, gemm_bytes, Fx)
+        stage("combine_h", (l.nnz_w - m * n) * Ms * Ns * B,
+              (Mp * Np + R * Ms * Ns) * B * by, Fa)
+    return LCMAEstimate(l, tuple(stages), (Mp, Np, Kp))
+
+
+def decide_batched(B: int, M: int, N: int, K: int, hw: HardwareProfile | str,
+                   dtype: str = "bfloat16",
+                   candidates: list[LCMA] | None = None, fused: bool = True,
+                   precombined_b: bool = False, shared_b: bool = False,
+                   pad_multiple: tuple[int, int, int] = (1, 1, 1),
+                   min_speedup: float = 1.0) -> GroupedDecision:
+    """Select the best LCMA for a grouped contraction, or batched GEMM.
+
+    The grouped analogue of :func:`decide`: one Decision for the whole
+    ``B x (M, K) @ (K, N)`` group. ``B=1`` degenerates to the 2-D model
+    (same estimates as ``decide``).
+    """
+    hw = _resolve_hw(hw)
+    t_gemm = gemm_time_batched(B, M, N, K, hw, dtype, shared_b=shared_b)
+    if candidates is None:
+        candidates = algorithms.candidates()
+    if batched_is_memory_bound(B, M, N, K, hw, dtype, shared_b=shared_b):
+        return GroupedDecision(M, N, K, dtype, None, t_gemm, None, (),
+                               B=B, shared_b=shared_b)
+    ests = tuple(
+        estimate_grouped(l, B, M, N, K, hw, dtype, fused=fused,
+                         precombined_b=precombined_b, shared_b=shared_b,
+                         pad_multiple=pad_multiple)
+        for l in candidates
+    )
+    best = min(ests, key=lambda e: e.time, default=None)
+    if best is not None and best.time * min_speedup < t_gemm:
+        return GroupedDecision(M, N, K, dtype, best.lcma, t_gemm, best.time,
+                               ests, B=B, shared_b=shared_b)
+    return GroupedDecision(M, N, K, dtype, None, t_gemm, None, ests,
+                           B=B, shared_b=shared_b)
 
 
 def effective_tflops(M: int, N: int, K: int, seconds: float) -> float:

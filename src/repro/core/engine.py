@@ -40,15 +40,17 @@ import numpy as np
 
 from . import algorithms, backends
 from .decision import backward_shapes
-from .falcon_gemm import (FalconConfig, _lcma_apply, _pad2,
-                          matmul_with_precombined, plan, plan_training,
-                          precombine_weights)
+from .falcon_gemm import (FalconConfig, _lcma_apply, _lcma_apply_grouped,
+                          _pad2, grouped_matmul_with_precombined,
+                          matmul_with_precombined, plan, plan_batched,
+                          plan_training, precombine_weights)
 from .lcma import LCMA
 
 __all__ = ["use", "current_config", "active_config", "maybe_use",
            "config_scope", "matmul", "dense", "dot_general", "einsum",
-           "PlannedWeight", "plan_weight", "precombine_params",
-           "refresh_planned_params", "projection_shapes", "warm_buckets",
+           "grouped_matmul", "PlannedWeight", "plan_weight",
+           "precombine_params", "refresh_planned_params",
+           "projection_shapes", "grouped_expert_shapes", "warm_buckets",
            "FalconEngine"]
 
 
@@ -185,7 +187,8 @@ class PlannedWeight:
 
 
 def plan_weight(w: jnp.ndarray, cfg: FalconConfig | None = None,
-                m_hint: int = 1024, keep_weight: bool = True) -> PlannedWeight:
+                m_hint: int = 1024, keep_weight: bool = True,
+                grouped: bool = False) -> PlannedWeight:
     """Plan a static weight for serving: pick an LCMA and precombine B̃.
 
     The Decision Module is consulted with ``precombined_b=True`` — the right
@@ -194,6 +197,13 @@ def plan_weight(w: jnp.ndarray, cfg: FalconConfig | None = None,
     goes through the plan cache like every other ``plan()`` call. Weights of
     rank 3 are treated as stacked (leading layer/codebook dim) and combined
     per slice; the per-matrix shape is the trailing (K, N).
+
+    ``grouped=True`` marks a rank-3 stack whose slices execute *together* as
+    one grouped contraction (MoE experts via ``grouped_matmul``) rather than
+    sequentially (scan-stacked layers): profitability is then judged by
+    ``plan_batched`` on the grouped problem — ``m_hint`` still counts total
+    activation rows, split evenly across the G slices — matching how
+    ``_apply_planned_grouped`` will re-price it at serve time.
 
     ``keep_weight=False`` drops the raw weight (halves serving memory for the
     planned layers); the precombined path is then always taken.
@@ -204,7 +214,12 @@ def plan_weight(w: jnp.ndarray, cfg: FalconConfig | None = None,
                              k=int(w.shape[-2]) if w.ndim >= 2 else 0,
                              n=int(w.shape[-1]))
     K, N = int(w.shape[-2]), int(w.shape[-1])
-    d = plan(m_hint, K, N, cfg, str(w.dtype), precombined_b=True)
+    if grouped and w.ndim == 3:
+        G = int(w.shape[0])
+        d = plan_batched(G, max(m_hint // G, 8), K, N, cfg, str(w.dtype),
+                         precombined_b=True)
+    else:
+        d = plan(m_hint, K, N, cfg, str(w.dtype), precombined_b=True)
     if not d.use_lcma:
         return PlannedWeight(w=w, bt=None, algo=None, k=K, n=N)
     l = d.algo
@@ -217,7 +232,14 @@ def plan_weight(w: jnp.ndarray, cfg: FalconConfig | None = None,
 _DEFAULT_PRECOMBINE_PATTERNS = (
     "w_q", "w_k", "w_v", "w_o", "mlp_gate", "mlp_up", "mlp_down",
     "lm_head", "ssm_in", "ssm_out",
+    # MoE expert stacks lift to stacked PlannedWeights; the grouped dispatch
+    # (engine.grouped_matmul) applies them per expert against stacked B̃.
+    "moe_gate", "moe_up", "moe_down",
 )
+
+# Stacks matching these execute as ONE grouped contraction (not per-slice),
+# so plan_weight judges them with the grouped decision (plan_batched).
+_GROUPED_PRECOMBINE_PATTERNS = ("moe_gate", "moe_up", "moe_down")
 
 
 def precombine_params(params, cfg: FalconConfig | None = None,
@@ -242,7 +264,10 @@ def precombine_params(params, cfg: FalconConfig | None = None,
                         for p in path)
         if leaf.ndim not in (2, 3) or not any(pat in keys for pat in patterns):
             return leaf
-        pw = plan_weight(leaf, cfg, m_hint=m_hint, keep_weight=keep_weight)
+        grouped = leaf.ndim == 3 and any(
+            pat in keys for pat in _GROUPED_PRECOMBINE_PATTERNS)
+        pw = plan_weight(leaf, cfg, m_hint=m_hint, keep_weight=keep_weight,
+                         grouped=grouped)
         if pw.precombined:
             n_planned += 1
             return pw
@@ -331,6 +356,29 @@ def projection_shapes(arch) -> list[tuple[int, int]]:
     return [s for s in shapes if not (s in seen or seen.add(s))]
 
 
+def grouped_expert_shapes(arch, m_tokens: int) -> list[tuple[int, int, int, int]]:
+    """The grouped (E, C, K, N) contractions a MoE ``arch`` dispatches.
+
+    For ``m_tokens`` activation rows entering the MoE block, each of the E
+    experts sees a capacity-C token block (the same formula ``moe_apply``
+    uses), and the three FFN projections run as grouped contractions
+    ``E x (C, K) @ (K, N)``. Empty for dense architectures.
+    """
+    E = int(getattr(arch, "num_experts", 0))
+    if not E:
+        return []
+    from .workloads import moe_capacity
+    d = int(arch.d_model)
+    ff = int(getattr(arch, "d_ff", 0))
+    top_k = int(getattr(arch, "experts_per_token", 0)) or 1
+    cf = float(getattr(arch, "capacity_factor", 1.25))
+    # shard_round=True: the model layer stack serves with the 256-rounded
+    # shardable capacity, and the grouped plan-cache keys embed C
+    C = moe_capacity(m_tokens, top_k, E, cf, shard_round=True)
+    shapes = [(d, ff), (ff, d)]          # gate/up share (d, ff); down is (ff, d)
+    return [(E, C, K, N) for (K, N) in shapes]
+
+
 def warm_buckets(cfg: FalconConfig | None, arch, buckets,
                  dtype: str | None = None, train: bool = False) -> int:
     """Pre-plan every projection of ``arch`` at every bucketed M.
@@ -350,14 +398,52 @@ def warm_buckets(cfg: FalconConfig | None, arch, buckets,
     cfg = _resolve(cfg)
     dtype = dtype or str(getattr(arch, "dtype", "bfloat16"))
     n = 0
-    for M in sorted(set(int(b) for b in buckets)):
+    buckets = sorted(set(int(b) for b in buckets))
+    pre_algos: dict[tuple[int, int], set[str]] = {}
+    pre_algos_grouped: dict[tuple[int, int, int], set[str]] = {}
+    for M in buckets:
         for (K, N) in projection_shapes(arch):
             plan(M, K, N, cfg, dtype)
-            plan(M, K, N, cfg, dtype, precombined_b=True)
+            d_pre = plan(M, K, N, cfg, dtype, precombined_b=True)
+            if d_pre.use_lcma:
+                pre_algos.setdefault((K, N), set()).add(d_pre.algo.name)
             n += 2
             if train:
                 for (Mb, Kb, Nb) in backward_shapes(M, K, N):
                     plan(Mb, Kb, Nb, cfg, dtype)
+                    n += 1
+        # MoE expert FFNs dispatch as grouped contractions (one plan-cache
+        # key per grouped shape), so decode/prefill-time MoE traces hit the
+        # cache like every dense projection does.
+        for (E, C, K, N) in grouped_expert_shapes(arch, M):
+            plan_batched(E, C, K, N, cfg, dtype)
+            d_pre = plan_batched(E, C, K, N, cfg, dtype, precombined_b=True)
+            if d_pre.use_lcma:
+                pre_algos_grouped.setdefault((E, K, N), set()).add(
+                    d_pre.algo.name)
+            n += 2
+            if train:
+                plan_batched(E, C, N, K, cfg, dtype)     # dA
+                plan_batched(E, K, C, N, cfg, dtype)     # dB
+                n += 2
+    # The PlannedWeight apply path re-decides at the actual M with candidates
+    # restricted to the weight's own scheme — a differently-keyed plan (the
+    # candidate set is part of the key). Pre-plan those restricted variants
+    # for every scheme any bucket's precombined decision picked, so the
+    # serve-time re-decision is a cache hit too, at every bucket M.
+    if cfg.mode == "auto":
+        for M in buckets:
+            for (K, N), algos in pre_algos.items():
+                for a in sorted(algos):
+                    plan(M, K, N,
+                         dataclasses.replace(cfg, candidates=(a,)),
+                         dtype, precombined_b=True)
+                    n += 1
+            for (E, C, K, N) in grouped_expert_shapes(arch, M):
+                for a in sorted(pre_algos_grouped.get((E, K, N), ())):
+                    plan_batched(E, C, K, N,
+                                 dataclasses.replace(cfg, candidates=(a,)),
+                                 dtype, precombined_b=True)
                     n += 1
     return n
 
@@ -394,8 +480,9 @@ def _planned_core(cfg: FalconConfig):
 
     Cached per (frozen, hashable) config so repeated traces reuse one
     ``custom_vjp`` instance — jit caches then key on a stable callable.
-    vmap-compatible: ``dot_general`` maps it over batch dims, and plan()
-    inside sees the per-element 2-D shapes it should price.
+    Serves the *unbatched* contractions only: batched ``dot_general``
+    lowers through :func:`_grouped_core` (one grouped ``plan_batched``
+    decision for the whole group), not a ``vmap`` of this core.
     """
 
     @jax.custom_vjp
@@ -437,6 +524,257 @@ def _route_planned(M: int, K: int, N: int, cfg: FalconConfig, dtype: str):
     """
     d = plan(M, K, N, cfg, dtype)
     return (cfg.planned_vjp and d.use_lcma), d
+
+
+# ---------------------------------------------------------------------------
+# Grouped batched dispatch (paper §III-B Group-Parallel Optimizations)
+#
+# A grouped contraction — B independent (M, K) @ (K, N) products — used to
+# lower as ``jax.vmap`` over the independently-combined 2-D core: the
+# Decision Module priced ONE group element (so small-M groups like MoE
+# expert blocks always declined), and nothing was hoisted. The grouped core
+# below plans the whole group at once (``plan_batched``, one plan-cache key
+# per grouped shape), hoists Combine B when the B operand is shared across
+# the group, and executes the R*B intermediate products as a single grouped
+# GEMM through the backend's ``apply_grouped`` path.
+# ---------------------------------------------------------------------------
+
+def _dispatch_grouped(a3: jnp.ndarray, b: jnp.ndarray,
+                      cfg: FalconConfig) -> jnp.ndarray:
+    """Forward-only planned grouped contraction: plan_batched, LCMA or GEMM."""
+    G, M, K = a3.shape
+    d = plan_batched(G, M, K, b.shape[-1], cfg, str(a3.dtype),
+                     shared_b=b.ndim == 2)
+    if d.use_lcma:
+        return _lcma_apply_grouped(a3, b, d.algo, cfg)
+    return jnp.matmul(a3, b)     # broadcasts the shared-b case
+
+
+@functools.lru_cache(maxsize=None)
+def _grouped_core(cfg: FalconConfig, shared_b: bool):
+    """The custom-VJP grouped matmul core for ``cfg``.
+
+    Operands: a3 (G, M, K) and b (K, N) when ``shared_b`` else (G, K, N).
+    Backward mirrors the 2-D core: both gradients are independently planned
+    falcon contractions — grouped ones, except the shared-weight cotangent
+    ``dB = Σ_g a3[g]ᵀ g[g]``, which is exactly the flattened 2-D problem
+    ``(K, G·M) @ (G·M, N)`` and is planned as such.
+    """
+
+    @jax.custom_vjp
+    def core(a3, b):
+        return _dispatch_grouped(a3, b, cfg)
+
+    def fwd(a3, b):
+        # Runs only under differentiation: price the grouped backward shapes
+        # here so inference traces (serve) never pay for or cache them.
+        G, M, K = a3.shape
+        N = b.shape[-1]
+        dtype = str(a3.dtype)
+        plan_batched(G, M, N, K, cfg, dtype, shared_b=shared_b)      # dA
+        if shared_b:
+            plan(K, G * M, N, cfg, dtype)                            # dB (2-D)
+        else:
+            plan_batched(G, K, M, N, cfg, dtype)                     # dB
+        return _dispatch_grouped(a3, b, cfg), (a3, b)
+
+    def bwd(res, g3):
+        a3, b = res
+        if shared_b:
+            da = _dispatch_grouped(g3, b.T, cfg).astype(a3.dtype)
+            G, M, K = a3.shape
+            db = _dispatch2d(a3.reshape(G * M, K).T,
+                             g3.reshape(G * M, b.shape[-1]),
+                             cfg).astype(b.dtype)
+        else:
+            da = _dispatch_grouped(g3, jnp.swapaxes(b, 1, 2),
+                                   cfg).astype(a3.dtype)
+            db = _dispatch_grouped(jnp.swapaxes(a3, 1, 2), g3,
+                                   cfg).astype(b.dtype)
+        return da, db
+
+    core.defvjp(fwd, bwd)
+    return core
+
+
+def _route_grouped(G: int, M: int, K: int, N: int, cfg: FalconConfig,
+                   dtype: str, shared_b: bool):
+    """Routing decision for a grouped contraction: (use_custom_vjp_core, d)."""
+    d = plan_batched(G, M, K, N, cfg, dtype, shared_b=shared_b)
+    return (cfg.planned_vjp and d.use_lcma), d
+
+
+def _pw_grouped_primal(a3: jnp.ndarray, bt: jnp.ndarray, l: LCMA,
+                       n_logical: int, cfg: FalconConfig) -> jnp.ndarray:
+    """The grouped precombined-B̃ apply (backend native path or generated)."""
+    be = backends.get_backend(cfg.backend)
+    if be.apply_grouped_precombined is not None:
+        return be.apply_grouped_precombined(a3, bt, l, n_logical, cfg)
+    return grouped_matmul_with_precombined(a3, bt, l, n_logical, cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def _pw_grouped_core(cfg: FalconConfig, algo: str, n_logical: int,
+                     stacked: bool, trainable: bool):
+    """custom-VJP core for a grouped PlannedWeight apply.
+
+    ``trainable=True`` (raw weight kept) — the grouped analogue of the
+    trainable branch of :func:`_pw_core`: the primal reads only B̃ (the
+    serving fast path), the backward routes the cotangent to the RAW weight
+    — ``dw`` as a planned contraction (grouped per expert for a stacked
+    weight; the flattened 2-D problem for a shared one, since
+    ``dw = Σ_g a3[g]ᵀ g[g]``) — plus a planned grouped ``dx``. The B̃ leaf
+    gets a zero cotangent; :func:`refresh_planned_params` re-derives B̃ from
+    the updated weight. Without this, training a model with precombined
+    (stacked PlannedWeight) experts would silently produce zero gradients
+    for the expert weights: the primal never touches ``w``, and the B̃
+    cotangent is discarded by the refresh.
+
+    ``trainable=False`` (``keep_weight=False``): B̃ *is* the parameter; both
+    cotangents come from the rotated rank-R scheme (:func:`_pw_bwd_rotated`,
+    exact — the output is linear in B̃) applied per group element, summed
+    over the group for a shared B̃. This also keeps the dropped-weight
+    regime trainable on the Pallas backends, whose precombined kernels have
+    no autodiff rule of their own.
+    """
+    l = algorithms.get(algo)
+
+    if trainable:
+        @jax.custom_vjp
+        def core(a3, w, bt):
+            return _pw_grouped_primal(a3, bt, l, n_logical, cfg)
+
+        def fwd(a3, w, bt):
+            # runs only under differentiation: price the backward shapes
+            # here so inference traces never pay for (or cache) dA/dB plans
+            G, M, K = a3.shape
+            dtype = str(a3.dtype)
+            plan_batched(G, M, n_logical, K, cfg, dtype,
+                         shared_b=not stacked)
+            if stacked:
+                plan_batched(G, K, M, n_logical, cfg, dtype)
+            else:
+                plan(K, G * M, n_logical, cfg, dtype)
+            return _pw_grouped_primal(a3, bt, l, n_logical, cfg), (a3, w, bt)
+
+        def bwd(res, g3):
+            a3, w, bt = res
+            G, M, K = a3.shape
+            if stacked:
+                dx = _dispatch_grouped(g3, jnp.swapaxes(w, 1, 2),
+                                       cfg).astype(a3.dtype)
+                dw = _dispatch_grouped(jnp.swapaxes(a3, 1, 2), g3,
+                                       cfg).astype(w.dtype)
+            else:
+                dx = _dispatch_grouped(g3, w.T, cfg).astype(a3.dtype)
+                dw = _dispatch2d(a3.reshape(G * M, K).T,
+                                 g3.reshape(G * M, n_logical),
+                                 cfg).astype(w.dtype)
+            return dx, dw, jnp.zeros_like(bt)
+
+        core.defvjp(fwd, bwd)
+        return core
+
+    @jax.custom_vjp
+    def core_bt(a3, bt):
+        return _pw_grouped_primal(a3, bt, l, n_logical, cfg)
+
+    def fwd_bt(a3, bt):
+        return _pw_grouped_primal(a3, bt, l, n_logical, cfg), (a3, bt)
+
+    def bwd_bt(res, g3):
+        a3, bt = res
+        if stacked:
+            dx, dbt = jax.vmap(
+                lambda x2, b2, g2: _pw_bwd_rotated(x2, b2, g2, l, cfg))(
+                a3, bt, g3)
+        else:
+            dx, dbt_g = jax.vmap(
+                lambda x2, g2: _pw_bwd_rotated(x2, bt, g2, l, cfg))(a3, g3)
+            dbt = jnp.sum(dbt_g, axis=0).astype(bt.dtype)
+        return dx, dbt
+
+    core_bt.defvjp(fwd_bt, bwd_bt)
+    return core_bt
+
+
+def _apply_planned_grouped(a3: jnp.ndarray, pw: PlannedWeight,
+                           cfg: FalconConfig) -> jnp.ndarray:
+    """Grouped apply against a PlannedWeight: a3 (G, M, K) -> (G, M, N).
+
+    A 2-D PlannedWeight is the hoisted case — its offline B̃ is shared by the
+    whole group. A stacked PlannedWeight (``w (G, K, N)``, MoE experts) is
+    applied per group element against its stacked B̃ (G, R, K/k, N/n), still
+    as ONE grouped contraction. The Decision Module re-prices the *grouped*
+    problem (``precombined_b=True``) at the actual (G, M), restricted to the
+    precombined scheme. Trainable under ``cfg.planned_vjp`` via
+    :func:`_pw_grouped_core`: with the raw weight kept, gradients route to
+    it as planned contractions; with ``keep_weight=False`` B̃ *is* the
+    parameter and the rotated rank-R scheme supplies exact cotangents (also
+    what keeps the Pallas backends trainable here — their precombined
+    kernels have no autodiff rule).
+    """
+    G, M, K = a3.shape
+    if pw.algo is None:
+        return jnp.matmul(a3, pw.w)
+    stacked = (pw.bt.ndim == 4) if pw.precombined else \
+        (pw.w is not None and pw.w.ndim == 3)
+    if cfg.mode == pw.algo or pw.w is None:
+        use_pre = True
+    elif not cfg.enabled or cfg.mode == "gemm":
+        use_pre = False
+    else:
+        d = plan_batched(G, M, K, pw.n,
+                         dataclasses.replace(cfg, mode="auto",
+                                             candidates=(pw.algo,)),
+                         str(a3.dtype), precombined_b=True,
+                         shared_b=not stacked)
+        use_pre = d.use_lcma
+    if not use_pre:
+        return jnp.matmul(a3, pw.w)
+    if cfg.planned_vjp:
+        if pw.w is not None:
+            return _pw_grouped_core(cfg, pw.algo, pw.n, stacked,
+                                    True)(a3, pw.w, pw.bt)
+        return _pw_grouped_core(cfg, pw.algo, pw.n, stacked,
+                                False)(a3, pw.bt)
+    return _pw_grouped_primal(a3, pw.bt, pw.lcma, pw.n, cfg)
+
+
+def grouped_matmul(a: jnp.ndarray, b, cfg: FalconConfig | None = None) -> jnp.ndarray:
+    """Grouped batched matmul: ``out[g] = a[g] @ b[g]`` as one planned unit.
+
+    ``a``: (G, M, K). ``b``: (K, N) — one operand shared (broadcast) across
+    the group, Combine B hoisted and run once — or (G, K, N) per-group
+    operands (MoE experts, batched attention), or a :class:`PlannedWeight`
+    (2-D or stacked; offline Combine B). The Decision Module prices the
+    whole group via ``plan_batched`` (one grouped plan-cache key, not G) and
+    the chosen backend executes the R*G intermediate products as a single
+    grouped GEMM. Differentiable: under ``cfg.planned_vjp`` gradients are
+    independently planned grouped contractions.
+    """
+    cfg = _resolve(cfg)
+    if isinstance(b, PlannedWeight):
+        if a.ndim != 3:
+            raise ValueError(f"grouped_matmul: a must be (G, M, K), "
+                             f"got {tuple(a.shape)}")
+        return _apply_planned_grouped(a, b, cfg)
+    if a.ndim != 3 or b.ndim not in (2, 3):
+        raise ValueError(f"grouped_matmul: expected a (G, M, K) and b "
+                         f"(K, N) | (G, K, N); got {tuple(a.shape)} @ "
+                         f"{tuple(b.shape)}")
+    G, M, K = a.shape
+    shared = b.ndim == 2
+    if b.shape[-2] != K or (not shared and b.shape[0] != G):
+        raise ValueError(f"grouped_matmul: shapes do not conform: "
+                         f"{tuple(a.shape)} @ {tuple(b.shape)}")
+    use_core, d = _route_grouped(G, M, K, b.shape[-1], cfg, str(a.dtype),
+                                 shared_b=shared)
+    if use_core:
+        return _grouped_core(cfg, shared)(a, b)
+    if not d.use_lcma:
+        return jnp.matmul(a, b)
+    return _lcma_apply_grouped(a, b, d.algo, cfg)
 
 
 # -- trainable PlannedWeight -------------------------------------------------
@@ -611,17 +949,20 @@ def dot_general(a: jnp.ndarray, b, dimension_numbers,
                 preferred_element_type=None) -> jnp.ndarray:
     """``jax.lax.dot_general`` with FalconGEMM dispatch.
 
-    Batched and transposed contractions are normalized down to the planned
-    2-D core: free/contracting dims are transposed adjacent and flattened to
-    a (M, K) x (K, N) problem (vmapped over batch dims), which the Decision
-    Module prices per batch element. Under ``cfg.planned_vjp`` an
-    LCMA-routed contraction runs through the custom-VJP core, so
-    ``jax.grad`` backward contractions are independently planned too
-    (backward shapes are priced only under differentiation — inference
-    traces never pay for dA/dB plans). When the Decision Module declines
-    (or an explicit ``preferred_element_type`` asks for non-input
-    accumulation semantics the LCMA combines don't honor), the call lowers
-    to ``lax.dot_general`` untouched — bitwise-identical fallback.
+    Transposed contractions are normalized: free/contracting dims are
+    transposed adjacent and flattened to a (M, K) x (K, N) problem. An
+    unbatched contraction is priced by ``plan()`` and runs the planned 2-D
+    core; a **batched** contraction is priced as a whole group by
+    ``plan_batched`` (one grouped decision and ONE grouped plan-cache key
+    for the batch — never per-element pricing) and runs the grouped core.
+    Under ``cfg.planned_vjp`` an LCMA-routed contraction runs through the
+    matching custom-VJP core, so ``jax.grad`` backward contractions are
+    independently planned too (backward shapes are priced only under
+    differentiation — inference traces never pay for dA/dB plans). When the
+    Decision Module declines (or an explicit ``preferred_element_type``
+    asks for non-input accumulation semantics the LCMA combines don't
+    honor), the call lowers to ``lax.dot_general`` untouched —
+    bitwise-identical fallback.
     """
     cfg = _resolve(cfg)
     (ac, bc), (ab, bb) = dimension_numbers
@@ -641,9 +982,17 @@ def dot_general(a: jnp.ndarray, b, dimension_numbers,
     lcma_ok = (M > 0 and N > 0 and K > 0
                and (preferred_element_type is None
                     or jnp.dtype(preferred_element_type) == a.dtype))
+    batch_shape = tuple(a.shape[i] for i in ab)
+    Bsz = int(np.prod(batch_shape)) if ab else 1
     use_core = d = None
-    if lcma_ok:
+    if lcma_ok and not ab:
         use_core, d = _route_planned(M, K, N, cfg, str(a.dtype))
+    elif lcma_ok:
+        # Batched contraction: price the whole group (plan_batched — one
+        # grouped plan-cache key), not one vmapped element. Both operands
+        # carry the batch dims here, so the B operand is per-group.
+        use_core, d = _route_grouped(Bsz, M, K, N, cfg, str(a.dtype),
+                                     shared_b=False)
     if not use_core and (d is None or not d.use_lcma):
         return jax.lax.dot_general(a, b, dn, precision=precision,
                                    preferred_element_type=preferred_element_type)
@@ -653,16 +1002,17 @@ def dot_general(a: jnp.ndarray, b, dimension_numbers,
     b_perm = bb + bc + b_free
     at = a if a_perm == tuple(range(a.ndim)) else jnp.transpose(a, a_perm)
     bt = b if b_perm == tuple(range(b.ndim)) else jnp.transpose(b, b_perm)
-    batch_shape = tuple(a.shape[i] for i in ab)
     out_shape = batch_shape + tuple(a.shape[i] for i in a_free) \
         + tuple(b.shape[i] for i in b_free)
-    core = _planned_core(cfg) if use_core \
-        else (lambda x2, y2: _lcma_apply(x2, y2, d.algo, cfg))
     if not ab:
+        core = _planned_core(cfg) if use_core \
+            else (lambda x2, y2: _lcma_apply(x2, y2, d.algo, cfg))
         c = core(at.reshape(M, K), bt.reshape(K, N))
         return c.reshape(out_shape)
-    Bsz = int(np.prod(batch_shape))
-    c3 = jax.vmap(core)(at.reshape(Bsz, M, K), bt.reshape(Bsz, K, N))
+    a3 = at.reshape(Bsz, M, K)
+    b3 = bt.reshape(Bsz, K, N)
+    c3 = _grouped_core(cfg, False)(a3, b3) if use_core \
+        else _lcma_apply_grouped(a3, b3, d.algo, cfg)
     return c3.reshape(out_shape)
 
 
@@ -764,6 +1114,15 @@ class FalconEngine:
 
     def dot_general(self, a, b, dimension_numbers, **kw):
         return dot_general(a, b, dimension_numbers, cfg=self.config, **kw)
+
+    def grouped_matmul(self, a, b):
+        return grouped_matmul(a, b, cfg=self.config)
+
+    def plan_batched(self, B: int, M: int, K: int, N: int,
+                     dtype: str = "bfloat16", precombined_b: bool = False,
+                     shared_b: bool = False):
+        return plan_batched(B, M, K, N, self.config, dtype,
+                            precombined_b=precombined_b, shared_b=shared_b)
 
     def einsum(self, subscripts, *operands, **kw):
         return einsum(subscripts, *operands, cfg=self.config, **kw)

@@ -37,7 +37,9 @@ from .lcma import LCMA
 log = logging.getLogger(__name__)
 
 __all__ = ["FalconConfig", "falcon_matmul", "falcon_dense", "plan",
-           "plan_training", "precombine_weights", "matmul_with_precombined"]
+           "plan_batched", "plan_training", "precombine_weights",
+           "matmul_with_precombined", "grouped_matmul_generated",
+           "grouped_matmul_with_precombined"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +157,59 @@ def plan(M: int, K: int, N: int, cfg: FalconConfig, dtype: str = "bfloat16",
     return d
 
 
+def plan_batched(B: int, M: int, K: int, N: int, cfg: FalconConfig,
+                 dtype: str = "bfloat16", precombined_b: bool = False,
+                 shared_b: bool = False) -> dec.GroupedDecision:
+    """Run the Decision Module for a grouped batched contraction.
+
+    One decision — and ONE plan-cache key (``gBxMxKxN``) — for the whole
+    ``B x (M, K) @ (K, N)`` group, instead of pricing a per-element 2-D core
+    that batching would then ``vmap``. The grouped model amortizes Combine
+    setup across the group: Combine B is priced once when the B operand is
+    shared (``shared_b=True`` — attention weights, PlannedWeights) and the
+    R*B intermediate products are priced as one grouped GEMM. ``cfg.shards``
+    scales the per-element (M, K, N); the group dim is not sharded here
+    (expert parallelism shards it upstream, inside ``shard_map``).
+    """
+    Ml, Kl, Nl = _local_shape(M, K, N, cfg)
+    B = int(B)
+    if B < 1:
+        raise ValueError(f"plan_batched: group size must be >= 1, got {B}")
+    if cfg.mode == "gemm" or not cfg.enabled:
+        t = dec.gemm_time_batched(B, Ml, Nl, Kl, cfg.profile, dtype,
+                                  shared_b=shared_b)
+        return dec.GroupedDecision(Ml, Nl, Kl, dtype, None, t, None, (),
+                                   B=B, shared_b=shared_b)
+    if cfg.mode != "auto":
+        l = algorithms.get(cfg.mode)
+        est = dec.estimate_grouped(l, B, Ml, Nl, Kl, cfg.profile, dtype,
+                                   fused=cfg.fused, precombined_b=precombined_b,
+                                   shared_b=shared_b)
+        return dec.GroupedDecision(
+            Ml, Nl, Kl, dtype, l,
+            dec.gemm_time_batched(B, Ml, Nl, Kl, cfg.profile, dtype,
+                                  shared_b=shared_b),
+            est.time, (est,), B=B, shared_b=shared_b)
+    cache = key = None
+    if cfg.use_plan_cache:
+        cache = plan_cache.default_cache()
+        key = plan_cache.plan_key(
+            Ml, Kl, Nl, cfg.profile, dtype, fused=cfg.fused,
+            precombined_b=precombined_b, mode=cfg.mode,
+            candidates=cfg.candidates, max_grid=cfg.max_grid,
+            min_speedup=cfg.min_speedup, batch=B, shared_b=shared_b)
+        hit = cache.lookup(key)
+        if isinstance(hit, dec.GroupedDecision):
+            return hit
+    d = dec.decide_batched(B, Ml, Nl, Kl, cfg.profile, dtype,
+                           candidates=cfg.candidate_schemes(), fused=cfg.fused,
+                           precombined_b=precombined_b, shared_b=shared_b,
+                           min_speedup=cfg.min_speedup)
+    if cache is not None:
+        cache.insert(key, d)
+    return d
+
+
 def plan_training(M: int, K: int, N: int, cfg: FalconConfig,
                   dtype: str = "bfloat16") -> tuple[dec.Decision, dec.Decision,
                                                     dec.Decision]:
@@ -185,6 +240,90 @@ def _pad2(x: jnp.ndarray, d0: int, d1: int) -> jnp.ndarray:
 def _lcma_apply(a2: jnp.ndarray, b: jnp.ndarray, l: LCMA, cfg: FalconConfig) -> jnp.ndarray:
     """Execute the chosen LCMA on 2-D operands via the registered backend."""
     return backends.get_backend(cfg.backend).apply(a2, b, l, cfg)
+
+
+def _pad3(x: jnp.ndarray, d0: int, d1: int) -> jnp.ndarray:
+    p0 = (-x.shape[1]) % d0
+    p1 = (-x.shape[2]) % d1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, 0), (0, p0), (0, p1)))
+    return x
+
+
+def grouped_matmul_generated(a3: jnp.ndarray, b: jnp.ndarray, l: LCMA,
+                             cfg: FalconConfig) -> jnp.ndarray:
+    """Grouped LCMA via the generated pure-JAX combines (the jnp backend).
+
+    a3 (G, M, K) x b [(K, N) shared | (G, K, N) per-group] -> (G, M, N).
+    The group-parallel lowering: per-group Combine A (one vmapped combine),
+    Combine B hoisted ONCE when ``b`` is shared, and the G*R intermediate
+    products as a single grouped ``dot_general`` (batch dims (g, r) — XLA
+    sees one batched GEMM, not G fragmented launches), then per-group
+    Combine H from the float32 accumulator.
+    """
+    G, M, K = a3.shape
+    gen = codegen.generate(l, codegen.CodegenOptions(fused=cfg.fused))
+    at = jax.vmap(gen.combine_a)(_pad3(a3, l.m, l.k))      # (G, R, X, Ks)
+    if b.ndim == 2:
+        N = b.shape[1]
+        bt = gen.combine_b(_pad2(b, l.k, l.n))             # hoisted: once
+        h = jnp.einsum("grxy,ryz->grxz", at, bt,
+                       preferred_element_type=jnp.float32)
+    else:
+        N = b.shape[2]
+        bt = jax.vmap(gen.combine_b)(_pad3(b, l.k, l.n))   # (G, R, Ks, Ns)
+        h = jnp.einsum("grxy,gryz->grxz", at, bt,
+                       preferred_element_type=jnp.float32)
+    c = jax.vmap(gen.stages["combine_h"], in_axes=(0, None))(h, a3.dtype)
+    return c[:, :M, :N]
+
+
+def grouped_matmul_with_precombined(a3: jnp.ndarray, bt: jnp.ndarray, l: LCMA,
+                                    n_logical: int,
+                                    cfg: FalconConfig | None = None) -> jnp.ndarray:
+    """Grouped serving-path matmul against precombined B̃ (generated combines).
+
+    ``bt`` is (R, K/k, N/n) — one shared weight — or (G, R, K/k, N/n) for
+    stacked per-group weights (a stacked :class:`PlannedWeight`, e.g. MoE
+    experts combined offline). Combine B never runs.
+    """
+    if cfg is None:
+        from . import engine
+        cfg = engine.current_config()
+    G, M, K = a3.shape
+    gen = codegen.generate(l, codegen.CodegenOptions(fused=cfg.fused))
+    ap = _pad3(a3, l.m, l.k)
+    if ap.shape[2] // l.k != bt.shape[-2]:
+        raise ValueError(
+            f"grouped_matmul_with_precombined: activation K={K} (padded "
+            f"{ap.shape[2]}, grid k={l.k}) does not match precombined "
+            f"B̃ {tuple(bt.shape)} for scheme {l.name} {l.key}")
+    at = jax.vmap(gen.combine_a)(ap)
+    if bt.ndim == 3:
+        h = jnp.einsum("grxy,ryz->grxz", at, bt.astype(at.dtype),
+                       preferred_element_type=jnp.float32)
+    else:
+        if bt.shape[0] != G:
+            raise ValueError(
+                f"grouped_matmul_with_precombined: group sizes differ: "
+                f"{a3.shape} vs B̃ {tuple(bt.shape)}")
+        h = jnp.einsum("grxy,gryz->grxz", at, bt.astype(at.dtype),
+                       preferred_element_type=jnp.float32)
+    c = jax.vmap(gen.stages["combine_h"], in_axes=(0, None))(h, a3.dtype)
+    return c[:, :M, :n_logical]
+
+
+def _lcma_apply_grouped(a3: jnp.ndarray, b: jnp.ndarray, l: LCMA,
+                        cfg: FalconConfig) -> jnp.ndarray:
+    """Execute a grouped LCMA via the backend's grouped path (or fallback).
+
+    Backends without a native ``apply_grouped`` fall back to the generated
+    grouped lowering — still one grouped GEMM, never a per-element loop.
+    """
+    be = backends.get_backend(cfg.backend)
+    if be.apply_grouped is not None:
+        return be.apply_grouped(a3, b, l, cfg)
+    return grouped_matmul_generated(a3, b, l, cfg)
 
 
 def falcon_matmul(a: jnp.ndarray, b, cfg: FalconConfig | None = None,

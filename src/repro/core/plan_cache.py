@@ -90,11 +90,21 @@ def _profile_fingerprint(hw: HardwareProfile) -> str:
 def plan_key(M: int, K: int, N: int, hw: HardwareProfile, dtype: str, *,
              fused: bool = True, precombined_b: bool = False,
              mode: str = "auto", candidates: tuple[str, ...] | None = None,
-             max_grid: int = 5, min_speedup: float = 1.0) -> str:
-    """Cache key for one Decision-Module invocation (local, per-device shape)."""
+             max_grid: int = 5, min_speedup: float = 1.0,
+             batch: int = 1, shared_b: bool = False) -> str:
+    """Cache key for one Decision-Module invocation (local, per-device shape).
+
+    ``batch > 1`` keys a *grouped* decision (``plan_batched``): the whole
+    ``B x (M, K) @ (K, N)`` group lives under ONE ``gBxMxKxN`` key — never B
+    per-element keys — and the shared-B (hoisted Combine-B) variant is keyed
+    separately because it prices differently. ``batch == 1`` keeps the
+    historical key format, so existing persisted caches stay valid.
+    """
     cands = ",".join(candidates) if candidates is not None else f"grid<={max_grid}"
+    shape = f"{M}x{K}x{N}" if batch == 1 else \
+        f"g{batch}x{M}x{K}x{N}|sb={int(shared_b)}"
     return "|".join([
-        f"{hw.name}@{_profile_fingerprint(hw)}", dtype, f"{M}x{K}x{N}",
+        f"{hw.name}@{_profile_fingerprint(hw)}", dtype, shape,
         f"mode={mode}", f"fused={int(fused)}", f"pre={int(precombined_b)}",
         f"ms={min_speedup:g}", cands,
     ])
@@ -137,18 +147,22 @@ def _file_lock(lock_path: str, timeout: float = 10.0):
 
 
 def _encode(d: dec.Decision) -> dict:
-    return {
+    out = {
         "M": d.M, "N": d.N, "K": d.K, "dtype": d.dtype,
         "algo": d.algo.name if d.algo is not None else None,
         "gemm_seconds": d.gemm_seconds, "lcma_seconds": d.lcma_seconds,
     }
+    if isinstance(d, dec.GroupedDecision):
+        out["B"] = d.B
+        out["shared_b"] = d.shared_b
+    return out
 
 
 def _decode(payload: dict) -> dec.Decision | None:
     try:
         algo = payload.get("algo")
         l = algorithms.get(algo) if algo is not None else None
-        return dec.Decision(
+        kw = dict(
             M=int(payload["M"]), N=int(payload["N"]), K=int(payload["K"]),
             dtype=str(payload["dtype"]), algo=l,
             gemm_seconds=float(payload["gemm_seconds"]),
@@ -156,6 +170,11 @@ def _decode(payload: dict) -> dec.Decision | None:
                           else float(payload["lcma_seconds"])),
             estimates=(),
         )
+        if "B" in payload:   # grouped entry (plan_batched)
+            return dec.GroupedDecision(B=int(payload["B"]),
+                                       shared_b=bool(payload.get("shared_b")),
+                                       **kw)
+        return dec.Decision(**kw)
     except (KeyError, TypeError, ValueError):
         return None       # unknown scheme / malformed entry: drop, don't crash
 

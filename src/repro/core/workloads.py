@@ -29,3 +29,21 @@ def warm_shapes(workload: str = "deepseek_r1") -> list[tuple[int, int, int]]:
     out = [(m, k, n) for m in WARM_TOKENS for k, n in LLM_SHAPES[workload]]
     out += [(s, s, s) for s in WARM_SQUARE]
     return out
+
+
+def moe_capacity(tokens: int, top_k: int, num_experts: int,
+                 capacity_factor: float, shard_round: bool = False) -> int:
+    """Per-expert token capacity ``C = max(ceil(T·k/E·cf), 8)``.
+
+    THE one definition of MoE capacity — shared by ``models.moe.moe_apply``,
+    the layer stack (``models.model``, which passes ``shard_round=True`` to
+    round capacities above 256 up to a 256 multiple for shardability), and
+    ``core.engine.grouped_expert_shapes`` (warm-bucket pre-planning). The
+    grouped plan-cache keys embed C, so these sites must agree bit-for-bit;
+    sharing the formula is what enforces it.
+    """
+    import math
+    c = max(math.ceil(tokens * top_k / num_experts * capacity_factor), 8)
+    if shard_round and c > 256:
+        c = -(-c // 256) * 256
+    return c

@@ -1,8 +1,13 @@
-from .fused_gemm import fused_gemm_combine_h, tiled_matmul
-from .group_combine import group_combine
-from .ops import (falcon_matmul_pallas, falcon_matmul_pallas_precombined,
+from .fused_gemm import (batched_fused_gemm_combine_h, fused_gemm_combine_h,
+                         tiled_matmul)
+from .group_combine import batched_group_combine, group_combine
+from .ops import (falcon_grouped_matmul_pallas,
+                  falcon_grouped_matmul_pallas_precombined,
+                  falcon_matmul_pallas, falcon_matmul_pallas_precombined,
                   matmul_pallas)
 
-__all__ = ["fused_gemm_combine_h", "tiled_matmul", "group_combine",
+__all__ = ["fused_gemm_combine_h", "batched_fused_gemm_combine_h",
+           "tiled_matmul", "group_combine", "batched_group_combine",
            "falcon_matmul_pallas", "falcon_matmul_pallas_precombined",
-           "matmul_pallas"]
+           "falcon_grouped_matmul_pallas",
+           "falcon_grouped_matmul_pallas_precombined", "matmul_pallas"]

@@ -106,6 +106,105 @@ def fused_gemm_combine_h(at: jnp.ndarray, bt: jnp.ndarray, w: np.ndarray,
     return fn(at, bt)
 
 
+def _batched_fused_kernel(at_ref, bt_ref, out_ref, acc_ref, *, w, grid_y,
+                          bt_batched):
+    """Grouped Alg. 2: leading parallel group axis; reduction is grid dim 3.
+
+    ``bt_batched=False`` is the hoisted shared-B case: the bt block carries
+    no group axis (its index map ignores ``g``), so one combined B̃ feeds
+    every group element — the Combine-B work was done once for the group.
+    """
+    R, m, n = w.shape
+    y = pl.program_id(3)
+
+    @pl.when(y == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    for r in range(R):
+        bt_r = bt_ref[0, r] if bt_batched else bt_ref[r]
+        acc_ref[r, :, :] += jnp.dot(
+            at_ref[0, r], bt_r, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(y == grid_y - 1)
+    def _combine_h():
+        for i in range(m):
+            for j in range(n):
+                acc = None
+                for r in range(R):
+                    c = int(w[r, i, j])
+                    if c == 0:
+                        continue
+                    t = acc_ref[r, :, :]
+                    t = t if c == 1 else (-t if c == -1 else t * c)
+                    acc = t if acc is None else acc + t
+                if acc is None:
+                    acc = jnp.zeros_like(acc_ref[0])
+                out_ref[0, i, j, :, :] = acc.astype(out_ref.dtype)
+
+
+def batched_fused_gemm_combine_h(at: jnp.ndarray, bt: jnp.ndarray,
+                                 w: np.ndarray, *,
+                                 block: tuple[int, int, int] | None = None,
+                                 out_dtype=None,
+                                 interpret: bool = False) -> jnp.ndarray:
+    """Grouped fused GEMM + Combine H: (G, R, X, Y) x bt --W--> (G, m, n, X, Z).
+
+    ``bt`` is either (G, R, Y, Z) — per-group combined B (MoE experts,
+    batched attention operands) — or (R, Y, Z), the *hoisted* shared-B form:
+    the same B̃ group is contracted against every at[g] without ever being
+    recombined or replicated in HBM. Either way the whole group's R
+    accumulators live in one persistent VMEM scratch per (g, x, z) tile and
+    H never reaches HBM.
+    """
+    from .tuning import plan_fused_gemm_blocks
+
+    R, m, n = w.shape
+    G, R2, X, Y = at.shape
+    bt_batched = bt.ndim == 4
+    if bt_batched:
+        G3, R3, Y2, Z = bt.shape
+        assert G3 == G, (at.shape, bt.shape)
+    else:
+        R3, Y2, Z = bt.shape
+    assert R == R2 == R3 and Y == Y2, (at.shape, bt.shape, w.shape)
+    out_dtype = out_dtype or at.dtype
+    bx, bz, by = block or plan_fused_gemm_blocks(X, Z, Y, R, m, n, at.dtype)
+    assert X % bx == 0 and Z % bz == 0 and Y % by == 0, ((X, Z, Y), (bx, bz, by))
+    grid = (G, X // bx, Z // bz, Y // by)
+
+    if bt_batched:
+        bt_spec = pl.BlockSpec((1, R, by, bz), lambda g, x, z, y: (g, 0, y, z))
+    else:
+        bt_spec = pl.BlockSpec((R, by, bz), lambda g, x, z, y: (0, y, z))
+
+    kernel = functools.partial(_batched_fused_kernel, w=w, grid_y=grid[3],
+                               bt_batched=bt_batched)
+    kwargs = {}
+    if _HAS_PLTPU and not interpret:  # pragma: no cover - TPU-only path
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")
+        )
+    fn = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, R, bx, by), lambda g, x, z, y: (g, 0, x, y)),
+            bt_spec,
+        ],
+        out_specs=pl.BlockSpec((1, m, n, bx, bz),
+                               lambda g, x, z, y: (g, 0, 0, x, z)),
+        out_shape=jax.ShapeDtypeStruct((G, m, n, X, Z), out_dtype),
+        scratch_shapes=[pltpu.VMEM((R, bx, bz), jnp.float32)] if _HAS_PLTPU
+        else [pl.MemorySpace.ANY((R, bx, bz), jnp.float32)],  # pragma: no cover
+        interpret=interpret,
+        **kwargs,
+    )
+    return fn(at, bt)
+
+
 def _matmul_kernel(a_ref, b_ref, out_ref, acc_ref, *, grid_y):
     y = pl.program_id(2)
 

@@ -85,3 +85,71 @@ def group_combine(x: jnp.ndarray, coeff: np.ndarray, *, block: tuple[int, int] |
         interpret=interpret,
     )
     return fn(*([x] * (d1 * d2)))
+
+
+def _batched_combine_kernel(*refs, coeff, nin):
+    """Leading group axis variant: blocks are (1, bx, by) / (1, R, bx, by)."""
+    in_refs = refs[:nin]
+    out_ref = refs[nin]
+    R = coeff.shape[0]
+    d1, d2 = coeff.shape[1], coeff.shape[2]
+    for r in range(R):
+        acc = None
+        for i in range(d1):
+            for l in range(d2):
+                c = int(coeff[r, i, l])
+                if c == 0:
+                    continue
+                t = in_refs[i * d2 + l][0]
+                t = t if c == 1 else (-t if c == -1 else t * c)
+                acc = t if acc is None else acc + t
+        if acc is None:
+            acc = jnp.zeros_like(out_ref[0, r])
+        out_ref[0, r, :, :] = acc
+
+
+def batched_group_combine(x: jnp.ndarray, coeff: np.ndarray, *,
+                          block: tuple[int, int] | None = None,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Group Combine over a batch: (G, d1*X, d2*Y) -> (G, R, X, Y).
+
+    The grouped-execution form of :func:`group_combine`: one extra *parallel*
+    grid dimension walks the group, and within each group element the kernel
+    is identical — every (x, y) tile's m*k co-located inputs are loaded into
+    VMEM once and all R combined tiles are produced on-chip. Coefficients
+    stay unrolled in the program; no relayout of ``x`` is materialized.
+    Dimensions must divide exactly — padding is handled by the caller
+    (`repro.kernels.ops`).
+    """
+    R, d1, d2 = coeff.shape
+    G, M, K = x.shape
+    assert M % d1 == 0 and K % d2 == 0, (x.shape, coeff.shape)
+    X, Y = M // d1, K // d2
+    bx, by = block or plan_combine_blocks(X, Y, R, d1 * d2, x.dtype)
+    assert X % bx == 0 and Y % by == 0, ((X, Y), (bx, by))
+    grid = (G, X // bx, Y // by)
+
+    in_specs = []
+    for i in range(d1):
+        for l in range(d2):
+            in_specs.append(
+                pl.BlockSpec(
+                    (1, bx, by),
+                    functools.partial(
+                        lambda g, gx, gy, i=i, l=l:
+                            (g, i * (X // bx) + gx, l * (Y // by) + gy)
+                    ),
+                )
+            )
+    out_spec = pl.BlockSpec((1, R, bx, by), lambda g, gx, gy: (g, 0, gx, gy))
+
+    kernel = functools.partial(_batched_combine_kernel, coeff=coeff, nin=d1 * d2)
+    fn = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((G, R, X, Y), x.dtype),
+        interpret=interpret,
+    )
+    return fn(*([x] * (d1 * d2)))

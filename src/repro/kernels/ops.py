@@ -12,16 +12,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lcma import LCMA
-from .fused_gemm import fused_gemm_combine_h, tiled_matmul
-from .group_combine import group_combine
-
-
-def _pad2(x: jnp.ndarray, d0: int, d1: int) -> jnp.ndarray:
-    p0 = (-x.shape[0]) % d0
-    p1 = (-x.shape[1]) % d1
-    if p0 or p1:
-        x = jnp.pad(x, ((0, p0), (0, p1)))
-    return x
+# one padding definition shared with the generated-jnp pipeline — the two
+# execution paths must pad identically or their outputs diverge at the edges
+from repro.core.falcon_gemm import _pad2, _pad3
+from .fused_gemm import (batched_fused_gemm_combine_h, fused_gemm_combine_h,
+                         tiled_matmul)
+from .group_combine import batched_group_combine, group_combine
 
 
 @partial(jax.jit, static_argnames=("l", "block_combine", "block_gemm", "interpret"))
@@ -78,6 +74,76 @@ def falcon_matmul_pallas_precombined(
     m, n, X, Z = cp.shape
     c = cp.transpose(0, 2, 1, 3).reshape(m * X, n * Z)
     return c[:M, :n_logical]
+
+
+@partial(jax.jit, static_argnames=("l", "block_combine", "block_gemm", "interpret"))
+def falcon_grouped_matmul_pallas(a3: jnp.ndarray, b: jnp.ndarray, l: LCMA,
+                                 block_combine: tuple[int, int] | None = None,
+                                 block_gemm: tuple[int, int, int] | None = None,
+                                 interpret: bool = False) -> jnp.ndarray:
+    """Grouped LCMA matmul: a3 (G, M, K) x b [(K, N) | (G, K, N)] -> (G, M, N).
+
+    The Group-Parallel batched pipeline: per-group Combine A (one batched
+    kernel launch), Combine B run ONCE when ``b`` is shared across the group
+    (2-D) or per group otherwise, then one grouped fused GEMM+Combine-H over
+    all G*R intermediate products. Handles arbitrary shapes via padding.
+    """
+    G, M, K = a3.shape
+    shared = b.ndim == 2
+    Kb, N = (b.shape if shared else b.shape[1:])
+    if K != Kb:
+        raise ValueError(f"falcon_grouped_matmul_pallas: contracting dims "
+                         f"differ: {a3.shape} @ {b.shape}")
+    if not shared and b.shape[0] != G:
+        raise ValueError(f"falcon_grouped_matmul_pallas: group sizes differ: "
+                         f"{a3.shape} @ {b.shape}")
+    ap = _pad3(a3, l.m, l.k)
+    at = batched_group_combine(ap, l.U, block=block_combine,
+                               interpret=interpret)
+    if shared:
+        bt = group_combine(_pad2(b, l.k, l.n), l.V, block=block_combine,
+                           interpret=interpret)
+    else:
+        bt = batched_group_combine(_pad3(b, l.k, l.n), l.V,
+                                   block=block_combine, interpret=interpret)
+    cp = batched_fused_gemm_combine_h(at, bt, l.W, block=block_gemm,
+                                      out_dtype=a3.dtype, interpret=interpret)
+    g, m, n, X, Z = cp.shape
+    c = cp.transpose(0, 1, 3, 2, 4).reshape(G, m * X, n * Z)
+    return c[:, :M, :N]
+
+
+@partial(jax.jit, static_argnames=("l", "n_logical", "block_combine",
+                                   "block_gemm", "interpret"))
+def falcon_grouped_matmul_pallas_precombined(
+        a3: jnp.ndarray, bt: jnp.ndarray, l: LCMA, n_logical: int,
+        block_combine: tuple[int, int] | None = None,
+        block_gemm: tuple[int, int, int] | None = None,
+        interpret: bool = False) -> jnp.ndarray:
+    """Grouped serving pipeline against precombined B̃.
+
+    ``bt`` is (R, K/k, N/n) — one weight shared by the group (a PlannedWeight
+    under a batched activation) — or (G, R, K/k, N/n) for stacked per-group
+    weights (MoE experts precombined offline). Combine B never runs.
+    """
+    G, M, K = a3.shape
+    ap = _pad3(a3, l.m, l.k)
+    if ap.shape[2] // l.k != bt.shape[-2]:
+        raise ValueError(
+            f"falcon_grouped_matmul_pallas_precombined: activation K={K} "
+            f"(padded {ap.shape[2]}, grid k={l.k}) does not match precombined "
+            f"B̃ {tuple(bt.shape)} for scheme {l.name} {l.key}")
+    if bt.ndim == 4 and bt.shape[0] != G:
+        raise ValueError(
+            f"falcon_grouped_matmul_pallas_precombined: group sizes differ: "
+            f"{a3.shape} vs B̃ {tuple(bt.shape)}")
+    at = batched_group_combine(ap, l.U, block=block_combine,
+                               interpret=interpret)
+    cp = batched_fused_gemm_combine_h(at, bt, l.W, block=block_gemm,
+                                      out_dtype=a3.dtype, interpret=interpret)
+    g, m, n, X, Z = cp.shape
+    c = cp.transpose(0, 1, 3, 2, 4).reshape(G, m * X, n * Z)
+    return c[:, :M, :n_logical]
 
 
 @partial(jax.jit, static_argnames=("block", "interpret"))

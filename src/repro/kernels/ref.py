@@ -50,3 +50,17 @@ def lcma_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, l: LCMA, out_dtype=None) -> 
     bt = group_combine_ref(bp, l.V)
     cp = fused_gemm_combine_h_ref(at, bt, l.W, out_dtype=out_dtype)
     return cp.transpose(0, 2, 1, 3).reshape(M, N)
+
+
+def grouped_lcma_matmul_ref(a3: jnp.ndarray, b, l: LCMA,
+                            out_dtype=None) -> jnp.ndarray:
+    """Grouped oracle: a3 (G, M, K) x b [(K, N) shared | (G, K, N)] -> (G, M, N).
+
+    Ground truth for the batched kernel pipeline: per-group Combine A, a
+    hoisted (shared-b) or per-group Combine B, one grouped GEMM, per-group
+    Combine H. Must equal ``vmap(lcma_matmul_ref)`` exactly.
+    """
+    import jax
+    if b.ndim == 2:
+        return jax.vmap(lambda ai: lcma_matmul_ref(ai, b, l, out_dtype))(a3)
+    return jax.vmap(lambda ai, bi: lcma_matmul_ref(ai, bi, l, out_dtype))(a3, b)

@@ -187,10 +187,10 @@ def _layer_body(x, lp, window, cfg: ModelConfig, positions, theta,
     else:
         h2 = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
     if cfg.family == "moe":
+        from repro.core.workloads import moe_capacity
         T = int(np.prod(h2.shape[:-1]))
-        cap = max(int(np.ceil(T * cfg.experts_per_token / cfg.num_experts
-                              * cfg.capacity_factor)), 8)
-        cap = -(-cap // 256) * 256 if cap > 256 else cap  # shardable capacity
+        cap = moe_capacity(T, cfg.experts_per_token, cfg.num_experts,
+                           cfg.capacity_factor, shard_round=True)
         y2, aux = MOE.moe_apply(lp["moe"], h2, cfg.experts_per_token,
                                 cfg.capacity_factor,
                                 deterministic_capacity=cap)

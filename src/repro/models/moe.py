@@ -13,8 +13,15 @@ Two dispatch paths:
 
   * ``_moe_dense`` (fallback without a mesh: CPU smoke tests, examples).
 
-Per-expert projections go through FalconGEMM; with small per-expert M the
-Decision Module falls back to standard GEMM — that is the intended behavior.
+Per-expert projections execute as **grouped batched FalconGEMM**
+(``engine.grouped_matmul``): the E experts' capacity-C token blocks are one
+planned grouped contraction — the Decision Module prices the whole
+``E x (C, K) @ (K, N)`` group (``plan_batched``, one plan-cache key) and the
+backend runs the R*E intermediate products as a single grouped GEMM, instead
+of E unplanned small GEMMs under ``vmap``. Expert weights may be lifted to
+stacked :class:`~repro.core.engine.PlannedWeight`\\ s
+(``falcon.precombine_params``) so serving never pays Combine B.
+``engine.warm_buckets`` pre-plans the grouped expert shapes per bucket.
 """
 from __future__ import annotations
 
@@ -25,7 +32,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import engine
-from repro.core.falcon_gemm import FalconConfig, falcon_matmul
+from repro.core.falcon_gemm import FalconConfig
+from repro.core.workloads import moe_capacity
 from repro.parallel.sharding import resolve_batch_axes
 from .layers import dense_init
 
@@ -46,13 +54,15 @@ def moe_init(key, d: int, d_ff: int, num_experts: int, dtype) -> dict:
 
 
 def _expert_ffn(p_gate, p_up, p_down, xb: jnp.ndarray) -> jnp.ndarray:
-    """xb: (E, C, d) -> (E, C, d). Batched per-expert SwiGLU via vmap'd falcon."""
-    def one(x, wg, wu, wd):
-        g = falcon_matmul(x, wg)
-        u = falcon_matmul(x, wu)
-        return falcon_matmul(jax.nn.silu(g) * u, wd)
+    """xb: (E, C, d) -> (E, C, d). Grouped per-expert SwiGLU.
 
-    return jax.vmap(one)(xb, p_gate, p_up, p_down)
+    Each projection is ONE planned grouped contraction over all E experts
+    (weights may be raw ``(E, K, N)`` arrays or stacked PlannedWeights) —
+    the group-parallel replacement for the old ``vmap``'d 2-D core.
+    """
+    g = engine.grouped_matmul(xb, p_gate)
+    u = engine.grouped_matmul(xb, p_up)
+    return engine.grouped_matmul(jax.nn.silu(g) * u, p_down)
 
 
 def _route(xt, router_logits, top_k):
@@ -114,6 +124,20 @@ def _moe_dense(p, x, top_k, C):
     return y.reshape(B, S, d), _aux_loss(probs, expert_idx, E)
 
 
+def _raw_weight(w):
+    """``shard_map`` in_specs take arrays; PlannedWeights ride as the raw w
+    (the per-device grouped dispatch inside the body re-plans local shapes)."""
+    if isinstance(w, engine.PlannedWeight):
+        if w.w is None:
+            raise ValueError(
+                "MoE expert-parallel (shard_map) path needs the raw expert "
+                "weights, but this PlannedWeight was built with "
+                "keep_weight=False (only B̃ is stored). Precombine MoE "
+                "params with keep_weight=True when serving under a TP mesh.")
+        return w.w
+    return w
+
+
 def _moe_shardmap(p, x, top_k, C_global, mesh):
     B, S, d = x.shape
     E = p["router"].shape[1]
@@ -153,7 +177,8 @@ def _moe_shardmap(p, x, top_k, C_global, mesh):
                   P("model", None, None), P("model", None, None)),
         out_specs=(xspec, P()),
         check_vma=False,
-    )(x, p["router"], p["moe_gate"], p["moe_up"], p["moe_down"])
+    )(x, p["router"], _raw_weight(p["moe_gate"]), _raw_weight(p["moe_up"]),
+      _raw_weight(p["moe_down"]))
     return out, aux
 
 
@@ -169,8 +194,8 @@ def moe_apply(p: dict, x: jnp.ndarray, top_k: int, capacity_factor: float,
         B, S, d = x.shape
         E = p["router"].shape[1]
         T = B * S
-        C = deterministic_capacity or max(
-            int(np.ceil(T * top_k / E * capacity_factor)), 8)
+        C = deterministic_capacity or moe_capacity(T, top_k, E,
+                                                   capacity_factor)
         from repro.parallel.sharding import get_parallel_style
         mesh = compat.get_abstract_mesh()
         nm = dict(mesh.shape).get("model", 1) if mesh is not None else 1

@@ -1,0 +1,166 @@
+"""Docs CI: execute every ``python`` code block in the docs and check links.
+
+Documentation rots the moment its snippets stop running. This tool keeps the
+guides honest:
+
+  * every fenced ```python block in the given markdown files is executed —
+    blocks within one file run *in order in one fresh interpreter* (so later
+    blocks may use names defined earlier), against a small prelude namespace
+    (``np``/``jnp``/``jax``/``falcon`` plus tiny conforming arrays, see
+    ``PRELUDE``). Non-runnable pseudo-code belongs in ```text blocks.
+  * every relative markdown link ``[...](path)`` must resolve to an existing
+    file (http(s)/mailto/pure-#anchor links are skipped).
+
+Run from the repo root (CI ``docs`` job)::
+
+    PYTHONPATH=src python -m repro.tools.check_docs            # README + docs/
+    PYTHONPATH=src python -m repro.tools.check_docs --links-only
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+_FENCE = re.compile(r"^```(\w[\w-]*)?\s*$")
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+# Names every doc snippet may assume. Kept tiny so the docs job stays fast;
+# shapes conform with each other (x @ w, A @ B, attention q/k) and are small
+# enough that auto-mode decisions resolve instantly on CPU.
+PRELUDE = """
+import numpy as np
+import jax
+import jax.numpy as jnp
+import repro.api as falcon
+
+_rng = np.random.default_rng(0)
+A = jnp.asarray(_rng.standard_normal((64, 48)), jnp.float32)
+B = jnp.asarray(_rng.standard_normal((48, 32)), jnp.float32)
+x = jnp.asarray(_rng.standard_normal((2, 16, 32)), jnp.float32)
+w = jnp.asarray(_rng.standard_normal((32, 64)), jnp.float32)
+W = w
+q = jnp.asarray(_rng.standard_normal((2, 16, 4, 8)), jnp.float32)
+k = jnp.asarray(_rng.standard_normal((2, 16, 4, 8)), jnp.float32)
+a3 = jnp.asarray(_rng.standard_normal((4, 16, 32)), jnp.float32)
+b3 = jnp.asarray(_rng.standard_normal((4, 32, 24)), jnp.float32)
+batch, prompt_len = 2, 16
+a, b = A, B
+dimension_numbers = (((1,), (0,)), ((), ()))      # plain a (M,K) @ b (K,N)
+"""
+
+
+def extract_python_blocks(text: str) -> list[tuple[int, str]]:
+    """-> [(first_line_number, source), ...] for ```python fences."""
+    blocks: list[tuple[int, str]] = []
+    lines = text.splitlines()
+    in_block = False
+    lang = None
+    start = 0
+    buf: list[str] = []
+    for i, line in enumerate(lines, 1):
+        m = _FENCE.match(line.strip()) if line.strip().startswith("```") else None
+        if not in_block and m:
+            in_block, lang, start, buf = True, (m.group(1) or ""), i + 1, []
+        elif in_block and line.strip() == "```":
+            if lang.lower() == "python":
+                blocks.append((start, "\n".join(buf)))
+            in_block = False
+        elif in_block:
+            buf.append(line)
+    return blocks
+
+
+def run_file_blocks(path: str, timeout: int = 600) -> list[str]:
+    """Execute the file's python blocks in one fresh interpreter; -> errors."""
+    with open(path) as f:
+        blocks = extract_python_blocks(f.read())
+    if not blocks:
+        return []
+    # One driver script per file: prelude, then each block exec'd with its
+    # doc line number attached so a failure points back into the markdown.
+    parts = [PRELUDE, "import traceback as _tb", "_failures = []"]
+    for lineno, src in blocks:
+        parts.append(
+            "try:\n"
+            + textwrap.indent(f"exec(compile({src!r}, "
+                              f"{f'{path}:{lineno}'!r}, 'exec'))", "    ")
+            + "\nexcept Exception:\n"
+            f"    _failures.append(({lineno}, _tb.format_exc()))\n")
+    parts.append(
+        "import sys\n"
+        "for _ln, _err in _failures:\n"
+        f"    print(f'{path}:{{_ln}}: python block failed\\n{{_err}}')\n"
+        "sys.exit(1 if _failures else 0)\n")
+    with tempfile.NamedTemporaryFile("w", suffix=".py", delete=False) as tf:
+        tf.write("\n".join(parts))
+        script = tf.name
+    try:
+        env = dict(os.environ, JAX_PLATFORMS="cpu")
+        out = subprocess.run([sys.executable, script], capture_output=True,
+                             text=True, timeout=timeout, env=env)
+        if out.returncode != 0:
+            msg = out.stdout.strip() or out.stderr.strip()
+            return [f"{path}: {msg}"]
+        return []
+    finally:
+        os.unlink(script)
+
+
+def check_links(path: str) -> list[str]:
+    """Relative markdown links must resolve to existing files."""
+    errors = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path) as f:
+        text = f.read()
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*",
+                    help="markdown files (default: README.md + docs/*.md)")
+    ap.add_argument("--links-only", action="store_true",
+                    help="skip code-block execution (fast local check)")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or (["README.md"] + sorted(glob.glob("docs/*.md")))
+    errors: list[str] = []
+    for path in paths:
+        if not os.path.exists(path):
+            errors.append(f"{path}: file not found")
+            continue
+        errors.extend(check_links(path))
+        if not args.links_only:
+            n = len(extract_python_blocks(open(path).read()))
+            errs = run_file_blocks(path)
+            errors.extend(errs)
+            print(f"{path}: {n} python block(s) "
+                  f"{'FAILED' if errs else 'ok'}, links "
+                  f"{'ok' if not any(path in e for e in errors) else 'checked'}")
+    if errors:
+        print(f"\n{len(errors)} docs problem(s):")
+        for e in errors:
+            print("  -", e.splitlines()[0] if "\n" in e else e)
+            if "\n" in e:
+                print(textwrap.indent(e, "      "))
+        return 1
+    print(f"\ndocs ok: {len(paths)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -118,6 +118,9 @@ def main(argv: list[str] | None = None) -> int:
     if report.max_rel_err is not None:
         print(f"  model-vs-measured pipeline rel.err: "
               f"max {report.max_rel_err:.1%} over {len(report.model_rel_err)} probes")
+    if report.eff_grouped is not None:
+        print(f"  grouped GEMM stage eff: measured {report.eff_grouped:.3f} "
+              f"vs eff_B model {report.eff_grouped_predicted:.3f}")
 
     if args.warm:
         # next to the profile JSON, wherever --out put it

@@ -1,0 +1,29 @@
+"""Shared synthetic LCMA schemes for the test suite.
+
+One definition of the |c|>1 regression scheme — previously copy-pasted into
+four test files, which could silently drift apart.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.core.lcma import LCMA, validate
+
+
+def mag2_111() -> LCMA:
+    """Valid <1,1,1>;2 scheme with |c| in {1, 2, 3}: C = (2A)(2B) - 3(AB)."""
+    return LCMA("mag2-111", 1, 1, 1, 2,
+                np.array([[[2]], [[1]]], np.int8),
+                np.array([[[2]], [[1]]], np.int8),
+                np.array([[[1]], [[-3]]], np.int8))
+
+
+def mag2_scheme() -> LCMA:
+    """<2,2,2>;14 with |c| in {1,2,3}: tensor product of the magnitude-2
+    <1,1,1>;2 scheme with Strassen. Regression scheme for the bug where the
+    combine emitters/kernels dropped coefficient magnitude (|c|>1 computed
+    wrong results for AlphaTensor standard-arithmetic / Smirnov listings)."""
+    l = alg.tensor_product(mag2_111(), alg.strassen(), "mag2-222")
+    assert validate(l)
+    return l

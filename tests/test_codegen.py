@@ -33,19 +33,7 @@ def test_dtypes(dtype, rng):
     np.testing.assert_allclose(np.asarray(C, np.float32), ref, rtol=tol, atol=tol)
 
 
-def _mag2_scheme():
-    """<2,2,2>;14 with |c| in {1,2,3}: tensor product of the magnitude-2
-    <1,1,1>;2 scheme with Strassen. Regression scheme for the bug where the
-    combine emitters dropped coefficient magnitude (|c|>1 computed wrong
-    results for AlphaTensor standard-arithmetic / Smirnov-style listings)."""
-    from repro.core.lcma import LCMA, validate
-    base = LCMA("mag2-111", 1, 1, 1, 2,
-                np.array([[[2]], [[1]]], np.int8),
-                np.array([[[2]], [[1]]], np.int8),
-                np.array([[[1]], [[-3]]], np.int8))
-    l = alg.tensor_product(base, alg.strassen(), "mag2-222")
-    assert validate(l)
-    return l
+from _schemes import mag2_scheme as _mag2_scheme  # noqa: E402 - shared fixture
 
 
 @pytest.mark.parametrize("fused", [True, False])

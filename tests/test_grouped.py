@@ -1,0 +1,545 @@
+"""Grouped batched LCMA execution: decision model, kernels, engine, MoE.
+
+The grouped path must be numerically equivalent to the old ``vmap``-over-2-D
+lowering for every backend/dtype, the Decision Module must price (and pick)
+grouped LCMAs where per-element pricing declines, and a batched shape must
+occupy exactly ONE grouped plan-cache key.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as falcon
+from repro.core import algorithms as alg
+from repro.core import decision as dec
+from repro.core import engine, plan_cache
+from repro.core.falcon_gemm import FalconConfig, plan_batched
+from repro.core.hardware import TPU_V5E, register_profile
+from repro.kernels import ops, ref
+from repro.kernels.fused_gemm import batched_fused_gemm_combine_h
+from repro.kernels.group_combine import batched_group_combine
+from repro.models import moe
+
+
+@pytest.fixture(autouse=True)
+def _fresh_plan_cache():
+    plan_cache.reset()
+    yield
+    plan_cache.reset()
+
+
+def _tol(dtype):
+    return dict(atol=1e-4, rtol=1e-4) if dtype == "float32" \
+        else dict(atol=0.15, rtol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# Decision model
+# ---------------------------------------------------------------------------
+
+def test_grouped_estimate_degenerates_to_2d_at_b1():
+    l = alg.get("strassen")
+    e1 = dec.estimate(l, 512, 384, 256, TPU_V5E, "bfloat16")
+    eg = dec.estimate_grouped(l, 1, 512, 384, 256, TPU_V5E, "bfloat16")
+    assert eg.time == pytest.approx(e1.time, rel=1e-12)
+    assert dec.gemm_time_batched(1, 512, 384, 256, TPU_V5E, "bfloat16") == \
+        pytest.approx(dec.gemm_time(512, 384, 256, TPU_V5E, "bfloat16"))
+
+
+def test_grouped_sharing_hoists_combine_b():
+    """Shared-B pricing: Combine B charged once, not B times; grouped time
+    strictly below the unshared group for any B > 1."""
+    l = alg.get("strassen")
+    shared = dec.estimate_grouped(l, 8, 1024, 4096, 4096, TPU_V5E, "bfloat16",
+                                  shared_b=True)
+    unshared = dec.estimate_grouped(l, 8, 1024, 4096, 4096, TPU_V5E, "bfloat16")
+    cb_s = next(s for s in shared.stages if s.name == "combine_b")
+    cb_u = next(s for s in unshared.stages if s.name == "combine_b")
+    assert cb_u.flops == pytest.approx(8 * cb_s.flops)
+    assert cb_u.bytes == pytest.approx(8 * cb_s.bytes)
+    assert shared.time < unshared.time
+
+
+def test_grouped_gemm_efficiency_amortizes_with_b():
+    """eff_B law: a profile with launch-limited batched GEMMs (eff < 1)
+    prices the grouped stage closer to peak as B grows."""
+    hw = dataclasses.replace(TPU_V5E, name="eff_test", lcma_gemm_efficiency=0.5)
+    l = alg.get("strassen")
+    t1 = dec.estimate_grouped(l, 1, 2048, 2048, 2048, hw, "bfloat16").time
+    t8 = dec.estimate_grouped(l, 8, 2048, 2048, 2048, hw, "bfloat16").time
+    t64 = dec.estimate_grouped(l, 64, 2048, 2048, 2048, hw, "bfloat16").time
+    # per-group-element time falls monotonically toward the eff=1 floor
+    assert t8 / 8 < t1
+    assert t64 / 64 < t8 / 8
+    floor = dec.estimate_grouped(
+        l, 1, 2048, 2048, 2048,
+        dataclasses.replace(hw, lcma_gemm_efficiency=1.0), "bfloat16").time
+    assert t64 / 64 > floor * 0.99
+
+
+def test_decision_selects_grouped_lcma_for_attention_shape():
+    """Acceptance: a batched attention score shape — B*H = 32 groups of a
+    long-prefill QK^T with wide heads, (Sq=8192, hd=1024) @ (hd, Sk=8192) —
+    where per-element pricing declines (the eff-limited GEMM stage loses to
+    one standard GEMM) but the grouped decision, with the eff_B amortization
+    of the 32*R-product grouped GEMM, picks an LCMA."""
+    hw = dataclasses.replace(TPU_V5E, name="attn_test",
+                             lcma_gemm_efficiency=0.6)
+    d1 = dec.decide(8192, 8192, 1024, hw, "float32")
+    dg = dec.decide_batched(32, 8192, 8192, 1024, hw, "float32")
+    assert not d1.use_lcma
+    assert dg.use_lcma and dg.B == 32 and dg.speedup > 1.05
+    # ...and through plan_batched it lands in the plan cache under ONE
+    # grouped key carrying the selected scheme
+    register_profile(hw)
+    cfg = FalconConfig(hardware="attn_test")
+    dp = plan_batched(32, 8192, 1024, 8192, cfg, "float32")
+    assert dp.use_lcma and dp.algo.name == dg.algo.name
+    keys = [k for k in plan_cache.default_cache().keys()
+            if "g32x8192x1024x8192" in k]
+    assert len(keys) == 1
+
+
+def test_decision_selects_grouped_lcma_for_moe_expert_shape():
+    """Acceptance: the MoE expert group (E x (C, d) @ (d, ff), precombined
+    stacked weights so Combine B is offline) picks an LCMA where pricing one
+    expert block declines."""
+    hw = dataclasses.replace(TPU_V5E, name="moe_test",
+                             lcma_gemm_efficiency=0.35)
+    E, C, d, ff = 16, 2048, 4096, 14336
+    d1 = dec.decide(C, ff, d, hw, "bfloat16", precombined_b=True)
+    dg = dec.decide_batched(E, C, ff, d, hw, "bfloat16", precombined_b=True)
+    assert not d1.use_lcma
+    assert dg.use_lcma and dg.speedup > 1.05
+    register_profile(hw)
+    cfg = FalconConfig(hardware="moe_test")
+    dp = plan_batched(E, C, d, ff, cfg, "bfloat16", precombined_b=True)
+    assert dp.use_lcma and dp.algo.name == dg.algo.name
+    keys = [k for k in plan_cache.default_cache().keys()
+            if f"g{E}x{C}x{d}x{ff}" in k]
+    assert len(keys) == 1
+
+
+def test_batched_memory_bound_guard():
+    assert dec.batched_is_memory_bound(8, 64, 64, 64, TPU_V5E, "bfloat16")
+    d = dec.decide_batched(8, 64, 64, 64, TPU_V5E, "bfloat16")
+    assert not d.use_lcma and d.estimates == ()
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: one grouped key per batched shape
+# ---------------------------------------------------------------------------
+
+def test_plan_batched_single_grouped_key():
+    cfg = FalconConfig(hardware="tpu_v5e")
+    for _ in range(5):
+        plan_batched(8, 256, 512, 384, cfg, "bfloat16")
+    cache = plan_cache.default_cache()
+    keys = cache.keys()
+    assert len(keys) == 1, keys
+    assert "g8x256x512x384" in keys[0]
+    assert cache.stats.misses == 1 and cache.stats.hits == 4
+    # shared-B prices differently => its own (single) key
+    plan_batched(8, 256, 512, 384, cfg, "bfloat16", shared_b=True)
+    assert len(cache.keys()) == 2
+
+
+def test_plan_batched_key_distinct_from_elementwise():
+    cfg = FalconConfig(hardware="tpu_v5e")
+    falcon.plan(256, 512, 384, cfg, "bfloat16")
+    plan_batched(8, 256, 512, 384, cfg, "bfloat16")
+    assert len(plan_cache.default_cache().keys()) == 2
+
+
+def test_grouped_decision_cache_roundtrip(tmp_path):
+    cfg = FalconConfig(hardware="tpu_v5e")
+    d = plan_batched(8, 1024, 4096, 14336, cfg, "bfloat16", shared_b=True)
+    path = str(tmp_path / "plans.json")
+    plan_cache.default_cache().save(path)
+    fresh = plan_cache.PlanCache(path=path)
+    assert len(fresh) == 1
+    hit = fresh.lookup(fresh.keys()[0])
+    assert isinstance(hit, dec.GroupedDecision)
+    assert hit.B == 8 and hit.shared_b and hit.use_lcma == d.use_lcma
+    assert (hit.algo.name if hit.algo else None) == \
+        (d.algo.name if d.algo else None)
+
+
+def test_dot_general_batched_uses_one_grouped_key():
+    """The batched dot_general lowering plans ONE grouped key for the whole
+    batch — not per-element keys — and still falls back cleanly."""
+    cfg = FalconConfig(hardware="tpu_v5e", use_plan_cache=True)
+    a = jnp.ones((4, 32, 24), jnp.float32)
+    b = jnp.ones((4, 24, 16), jnp.float32)
+    out = falcon.dot_general(a, b, (((2,), (1,)), ((0,), (0,))), cfg=cfg)
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(jax.lax.dot_general(a, b, (((2,), (1,)), ((0,), (0,))))),
+        rtol=1e-6)
+    keys = plan_cache.default_cache().keys()
+    grouped = [k for k in keys if "g4x32x24x16" in k]
+    assert len(grouped) == 1, keys
+
+
+# ---------------------------------------------------------------------------
+# Kernels: batched pipelines vs oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["strassen", "s223"])
+def test_batched_group_combine_matches_oracle(name, rng):
+    l = alg.get(name)
+    G, X, Y = 3, 16, 8
+    x = jnp.asarray(rng.standard_normal((G, l.m * X, l.k * Y)), jnp.float32)
+    got = batched_group_combine(x, l.U, block=(8, 8), interpret=True)
+    want = jax.vmap(lambda xi: ref.group_combine_ref(
+        xi.reshape(l.m, X, l.k, Y).transpose(0, 2, 1, 3), l.U))(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("shared_bt", [True, False])
+def test_batched_fused_gemm_matches_oracle(shared_bt, rng):
+    l = alg.get("strassen")
+    G, X, Y, Z = 3, 16, 16, 16
+    at = jnp.asarray(rng.standard_normal((G, l.R, X, Y)), jnp.float32)
+    bt_shape = (l.R, Y, Z) if shared_bt else (G, l.R, Y, Z)
+    bt = jnp.asarray(rng.standard_normal(bt_shape), jnp.float32)
+    got = batched_fused_gemm_combine_h(at, bt, l.W, block=(8, 8, 8),
+                                       interpret=True)
+    want = jax.vmap(
+        lambda ai: ref.fused_gemm_combine_h_ref(ai, bt, l.W))(at) \
+        if shared_bt else jax.vmap(
+        lambda ai, bi: ref.fused_gemm_combine_h_ref(ai, bi, l.W))(at, bt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("shared", [True, False])
+def test_grouped_pallas_pipeline_odd_shapes(shared, rng):
+    l = alg.get("laderman")
+    G, M, K, N = 2, 13, 9, 11
+    a3 = jnp.asarray(rng.standard_normal((G, M, K)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((K, N) if shared else (G, K, N)),
+                    jnp.float32)
+    got = ops.falcon_grouped_matmul_pallas(a3, b, l, interpret=True)
+    want = np.einsum("gmk,kn->gmn" if shared else "gmk,gkn->gmn",
+                     np.asarray(a3), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_grouped_ref_equals_vmap_of_2d_ref(rng):
+    l = alg.get("strassen")
+    a3 = jnp.asarray(rng.standard_normal((3, 16, 8)), jnp.float32)
+    b3 = jnp.asarray(rng.standard_normal((3, 8, 12)), jnp.float32)
+    got = ref.grouped_lcma_matmul_ref(a3, b3, l)
+    want = jax.vmap(lambda a, b: ref.lcma_matmul_ref(a, b, l))(a3, b3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Engine: grouped vs vmap equivalence across backends and dtypes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas_interpret"])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("shared", [True, False])
+def test_grouped_matmul_matches_vmap_lowering(backend, dtype, shared, rng):
+    """The tentpole equivalence: grouped lowering == vmap of the 2-D core,
+    per backend and dtype, shared and per-group B."""
+    cfg = FalconConfig(mode="strassen", backend=backend)
+    G, M, K, N = 4, 24, 20, 28
+    a3 = jnp.asarray(rng.standard_normal((G, M, K)), dtype)
+    b = jnp.asarray(rng.standard_normal((K, N) if shared else (G, K, N)),
+                    dtype)
+    got = falcon.grouped_matmul(a3, b, cfg=cfg)
+    assert got.dtype == a3.dtype and got.shape == (G, M, N)
+    if shared:
+        want = jax.vmap(lambda ai: falcon.matmul(ai, b, cfg=cfg))(a3)
+    else:
+        want = jax.vmap(lambda ai, bi: falcon.matmul(ai, bi, cfg=cfg))(a3, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("scheme", ["strassen", "laderman", "s223"])
+def test_grouped_matmul_matches_lax_per_scheme(scheme, rng):
+    cfg = FalconConfig(mode=scheme, backend="jnp")
+    a3 = jnp.asarray(rng.standard_normal((3, 26, 17)), jnp.float32)
+    b3 = jnp.asarray(rng.standard_normal((3, 17, 22)), jnp.float32)
+    got = falcon.grouped_matmul(a3, b3, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.einsum("gmk,gkn->gmn", np.asarray(a3),
+                                         np.asarray(b3)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_grouped_matmul_gemm_fallback_is_exact(rng):
+    cfg = FalconConfig(mode="gemm")
+    a3 = jnp.asarray(rng.standard_normal((2, 8, 8)), jnp.float32)
+    b3 = jnp.asarray(rng.standard_normal((2, 8, 8)), jnp.float32)
+    got = falcon.grouped_matmul(a3, b3, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(jnp.matmul(a3, b3)))
+
+
+def test_grouped_matmul_shape_validation():
+    cfg = FalconConfig()
+    with pytest.raises(ValueError):
+        falcon.grouped_matmul(jnp.ones((4, 8)), jnp.ones((8, 4)), cfg=cfg)
+    with pytest.raises(ValueError):
+        falcon.grouped_matmul(jnp.ones((2, 4, 8)), jnp.ones((3, 8, 4)), cfg=cfg)
+    with pytest.raises(ValueError):
+        falcon.grouped_matmul(jnp.ones((2, 4, 8)), jnp.ones((9, 4)), cfg=cfg)
+
+
+@pytest.mark.parametrize("shared", [True, False])
+def test_grouped_grads_match_lax(shared, rng):
+    """Planned grouped custom-VJP gradients == lax reference gradients."""
+    cfg = FalconConfig(mode="strassen", backend="jnp")
+    G, M, K, N = 3, 24, 16, 20
+    a3 = jnp.asarray(rng.standard_normal((G, M, K)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((K, N) if shared else (G, K, N)),
+                    jnp.float32)
+    sub = "gmk,kn->gmn" if shared else "gmk,gkn->gmn"
+
+    def loss(a, b):
+        return jnp.sum(falcon.grouped_matmul(a, b, cfg=cfg) ** 2)
+
+    def loss_ref(a, b):
+        return jnp.sum(jnp.einsum(sub, a, b) ** 2)
+
+    ga, gb = jax.grad(loss, argnums=(0, 1))(a3, b)
+    ra, rb = jax.grad(loss_ref, argnums=(0, 1))(a3, b)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ra), rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(rb), rtol=1e-3,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("stacked", [True, False])
+def test_grouped_planned_weight_apply(stacked, rng):
+    """PlannedWeight through the grouped path: stacked (per-expert B̃) and
+    shared (hoisted) forms both allclose to the raw contraction."""
+    cfg = FalconConfig(mode="strassen", backend="jnp")
+    G, M, K, N = 4, 24, 20, 28
+    a3 = jnp.asarray(rng.standard_normal((G, M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((G, K, N) if stacked else (K, N)),
+                    jnp.float32)
+    with falcon.use(cfg):
+        pw = falcon.plan_weight(w)
+        assert pw.precombined
+        got = falcon.grouped_matmul(a3, pw)
+    want = jnp.einsum("gmk,gkn->gmn" if stacked else "gmk,kn->gmn", a3, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("stacked", [True, False])
+def test_grouped_planned_weight_trains(stacked, rng):
+    """Precombined PlannedWeights through the grouped path TRAIN: the
+    cotangent routes to the raw weight via the grouped custom-VJP and
+    matches the lax reference (zero-grad regression guard — the primal
+    reads only B̃, so without the custom VJP grads.w would be 0 and the
+    B̃ update would be discarded by refresh_planned_params)."""
+    cfg = FalconConfig(mode="strassen", backend="jnp")
+    G, M, K, N = 4, 24, 20, 28
+    a3 = jnp.asarray(rng.standard_normal((G, M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((G, K, N) if stacked else (K, N)),
+                    jnp.float32)
+    sub = "gmk,gkn->gmn" if stacked else "gmk,kn->gmn"
+    with falcon.use(cfg):
+        pw = falcon.plan_weight(w, grouped=stacked)
+        assert pw.precombined and pw.w is not None
+
+        def loss(p):
+            return jnp.sum(falcon.grouped_matmul(a3, p) ** 2)
+
+        g = jax.grad(loss)(pw)
+    ref = jax.grad(lambda ww: jnp.sum(jnp.einsum(sub, a3, ww) ** 2))(w)
+    assert float(jnp.max(jnp.abs(g.w))) > 0.0
+    np.testing.assert_allclose(np.asarray(g.w), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_array_equal(np.asarray(g.bt), np.zeros_like(g.bt))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas_interpret"])
+@pytest.mark.parametrize("stacked", [True, False])
+def test_grouped_planned_weight_trains_without_raw_weight(backend, stacked,
+                                                          rng):
+    """keep_weight=False: B̃ is the parameter. The rotated rank-R grouped
+    backward supplies exact cotangents — including on the Pallas backends,
+    whose precombined kernels have no autodiff rule (this crashed before)."""
+    cfg = FalconConfig(mode="strassen", backend=backend)
+    G, M, K, N = 3, 16, 12, 8
+    a3 = jnp.asarray(rng.standard_normal((G, M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((G, K, N) if stacked else (K, N)),
+                    jnp.float32)
+    sub = "gmk,gkn->gmn" if stacked else "gmk,kn->gmn"
+    with falcon.use(cfg):
+        pw = falcon.plan_weight(w, keep_weight=False, grouped=stacked)
+        assert pw.precombined and pw.w is None
+
+        def loss(p):
+            return jnp.sum(falcon.grouped_matmul(a3, p) ** 2)
+
+        val, g = jax.value_and_grad(loss)(pw)
+    ref_val = jnp.sum(jnp.einsum(sub, a3, w) ** 2)
+    np.testing.assert_allclose(float(val), float(ref_val), rtol=1e-4)
+    # exact check: SGD on B̃ must reduce the loss (the cotangent is real)
+    assert float(jnp.max(jnp.abs(g.bt))) > 0.0
+    with falcon.use(cfg):
+        pw2 = dataclasses.replace(pw, bt=pw.bt - 1e-4 * g.bt)
+        val2 = loss(pw2)
+    assert float(val2) < float(val)
+
+
+def test_batched_einsum_attention_matches_reference(rng):
+    """Attention einsums (batched both sides) through the grouped routing."""
+    cfg = FalconConfig(mode="strassen")
+    q = jnp.asarray(rng.standard_normal((2, 16, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 16, 4, 8)), jnp.float32)
+    s = falcon.einsum("bqhd,bkhd->bhqk", q, k, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(s),
+                               np.einsum("bqhd,bkhd->bhqk", np.asarray(q),
+                                         np.asarray(k)),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE through the grouped path
+# ---------------------------------------------------------------------------
+
+def _tiny_moe(rng, dtype=jnp.float32):
+    key = jax.random.PRNGKey(3)
+    d, ff, E = 16, 32, 4
+    p = moe.moe_init(key, d, ff, E, dtype)
+    x = jnp.asarray(rng.standard_normal((2, 8, d)), dtype)
+    return p, x
+
+
+def _eager_moe_ffn(p, xb):
+    """Reference per-expert SwiGLU: plain jnp, no falcon anywhere."""
+    def one(x, wg, wu, wd):
+        g = x @ wg
+        u = x @ wu
+        return (jax.nn.silu(g) * u) @ wd
+    return jax.vmap(one)(xb, p["moe_gate"], p["moe_up"], p["moe_down"])
+
+
+def test_moe_dense_grouped_matches_eager(rng):
+    p, x = _tiny_moe(rng)
+    with falcon.use(FalconConfig(mode="strassen", backend="jnp")):
+        y, aux = moe.moe_apply(p, x, top_k=2, capacity_factor=1.5)
+    with falcon.use(FalconConfig(enabled=False)):
+        y_ref, aux_ref = moe.moe_apply(p, x, top_k=2, capacity_factor=1.5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-5)
+
+
+def test_moe_dense_planned_experts_match_eager(rng):
+    """Acceptance: precombined stacked expert weights through moe_apply are
+    allclose to the eager path, and the lift actually planned the experts."""
+    p, x = _tiny_moe(rng)
+    with falcon.use(FalconConfig(mode="strassen", backend="jnp")):
+        planned, n = falcon.precombine_params(p, m_hint=64)
+        assert n >= 3, "expert stacks should lift to PlannedWeights"
+        assert isinstance(planned["moe_gate"], falcon.PlannedWeight)
+        assert planned["moe_gate"].bt.ndim == 4       # stacked per-expert B̃
+        y, aux = moe.moe_apply(planned, x, top_k=2, capacity_factor=1.5)
+    with falcon.use(FalconConfig(enabled=False)):
+        y_ref, aux_ref = moe.moe_apply(p, x, top_k=2, capacity_factor=1.5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-5)
+
+
+def test_moe_expert_ffn_is_grouped_planned(rng):
+    """The expert FFN hits the plan cache under grouped keys (gEx...), one
+    per projection shape — not E per-expert keys."""
+    p, x = _tiny_moe(rng)
+    cfg = FalconConfig(hardware="tpu_v5e", use_plan_cache=True)
+    with falcon.use(cfg):
+        moe.moe_apply(p, x, top_k=2, capacity_factor=1.5)
+    grouped_keys = [k for k in plan_cache.default_cache().keys() if "|g4x" in k]
+    assert len(grouped_keys) == 2, grouped_keys   # (d, ff) and (ff, d)
+
+
+def test_warm_buckets_covers_grouped_expert_shapes():
+    class MoEArch:
+        d_model = 64
+        num_heads = 4
+        num_kv_heads = 4
+        resolved_head_dim = 16
+        d_ff = 128
+        num_experts = 4
+        experts_per_token = 2
+        capacity_factor = 1.25
+        vocab_size = 0
+        dtype = "bfloat16"
+
+    cfg = FalconConfig(hardware="tpu_v5e")
+    shapes = engine.grouped_expert_shapes(MoEArch(), 64)
+    assert shapes == [(4, 40, 64, 128), (4, 40, 128, 64)]
+    n = engine.warm_buckets(cfg, MoEArch(), [64])
+    cache = plan_cache.default_cache()
+    assert any("g4x40x64x128" in k for k in cache.keys())
+    assert any("g4x40x128x64" in k for k in cache.keys())
+    # every plan() / plan_batched() call landed in the cache exactly once
+    assert cache.stats.inserts == n
+    # a second warm pass is pure hits — the serve-time guarantee
+    engine.warm_buckets(cfg, MoEArch(), [64])
+    assert cache.stats.inserts == n
+
+
+def test_warm_buckets_covers_planned_weight_redecision_keys():
+    """The PlannedWeight apply path re-decides with candidates restricted to
+    the weight's scheme — a differently-keyed plan. warm_buckets must
+    pre-plan those restricted variants so the serve trace is a pure hit."""
+    class Arch:
+        d_model = 8192
+        num_heads = 64
+        num_kv_heads = 64
+        resolved_head_dim = 128
+        d_ff = 28672
+        vocab_size = 0
+        dtype = "bfloat16"
+
+    cfg = FalconConfig(hardware="tpu_v5e")
+    M = 8192
+    engine.warm_buckets(cfg, Arch(), [M])
+    cache = plan_cache.default_cache()
+    # at this scale some precombined projection decision picks an LCMA...
+    d_pre = falcon.plan(M, 8192, 28672, cfg, "bfloat16", precombined_b=True)
+    assert d_pre.use_lcma
+    # ...and the exact restricted-candidates re-decision _apply_planned runs
+    # at serve time is already cached (no new miss)
+    misses = cache.stats.misses
+    falcon.plan(M, 8192, 28672,
+                dataclasses.replace(cfg, mode="auto",
+                                    candidates=(d_pre.algo.name,)),
+                "bfloat16", precombined_b=True)
+    assert cache.stats.misses == misses
+
+
+def test_precombine_params_gates_moe_stack_on_grouped_decision():
+    """Stacked MoE expert weights are lifted iff the *grouped* decision
+    (plan_batched) accepts — not the per-element 2-D decision at m_hint.
+
+    The flip regime (per-element declines, grouped accepts) needs the
+    batched baseline compute-bound; scaled-up beta keeps the shapes small
+    enough that the precombined B̃ this test materializes stays tiny."""
+    hw = dataclasses.replace(TPU_V5E, name="moe_gate_test",
+                             lcma_gemm_efficiency=0.35, beta=819e9 * 8)
+    register_profile(hw)
+    cfg = FalconConfig(hardware="moe_gate_test")
+    E, C, d, ff = 16, 256, 512, 1792
+    w3 = jnp.zeros((E, d, ff), jnp.bfloat16)
+    with falcon.use(cfg):
+        # grouped=True (what precombine_params passes for moe_* leaves):
+        # the grouped decision accepts at m_hint//E = C rows per expert
+        pw = engine.plan_weight(w3, m_hint=E * C, grouped=True)
+        assert pw.precombined and pw.bt.ndim == 4
+        # per-element gating at the same m_hint declines (the old behavior)
+        pw2 = engine.plan_weight(w3, m_hint=C)
+        assert not pw2.precombined

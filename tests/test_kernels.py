@@ -41,17 +41,7 @@ def test_fused_gemm_blocks(name, blocks, rng):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
 
 
-def _mag2_scheme():
-    """<2,2,2>;14 with |c| in {1,2,3} — kernel regression for dropped
-    coefficient magnitude (``t if c > 0 else -t`` silently mapped 2 -> 1)."""
-    from repro.core.lcma import LCMA, validate
-    base = LCMA("mag2-111", 1, 1, 1, 2,
-                np.array([[[2]], [[1]]], np.int8),
-                np.array([[[2]], [[1]]], np.int8),
-                np.array([[[1]], [[-3]]], np.int8))
-    l = alg.tensor_product(base, alg.strassen(), "mag2-222")
-    assert validate(l)
-    return l
+from _schemes import mag2_scheme as _mag2_scheme  # noqa: E402 - shared fixture
 
 
 def test_group_combine_honors_coefficient_magnitude(rng):

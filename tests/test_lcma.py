@@ -48,12 +48,7 @@ def test_invalid_scheme_rejected():
     assert not validate(bad)
 
 
-def _mag2_111() -> LCMA:
-    """Valid <1,1,1>;2 scheme with |c| in {1, 2, 3}: C = (2A)(2B) - 3(AB)."""
-    return LCMA("mag2-111", 1, 1, 1, 2,
-                np.array([[[2]], [[1]]], np.int8),
-                np.array([[[2]], [[1]]], np.int8),
-                np.array([[[1]], [[-3]]], np.int8))
+from _schemes import mag2_111 as _mag2_111  # noqa: E402 - shared fixture
 
 
 def test_magnitude_coefficients_validate_and_apply(rng):

@@ -75,14 +75,9 @@ def test_quant_combine_honors_coefficient_magnitude(rng):
     """|c|=2 scheme through the quantized Combine-A: the f32 pre-quantization
     accumulator must scale by the coefficient magnitude (regression for the
     ``t if c > 0 else -t`` bug that mapped every |c| to 1)."""
-    from repro.core.lcma import LCMA, validate
+    from _schemes import mag2_scheme
 
-    base = LCMA("mag2-111", 1, 1, 1, 2,
-                np.array([[[2]], [[1]]], np.int8),
-                np.array([[[2]], [[1]]], np.int8),
-                np.array([[[1]], [[-3]]], np.int8))
-    l = alg.tensor_product(base, alg.strassen(), "mag2-222")
-    assert validate(l)
+    l = mag2_scheme()
     X, Y, by = 16, 32, 16
     x = jnp.asarray(rng.standard_normal((l.m * X, l.k * Y)), jnp.float32)
     q, s = group_combine_quant(x, l.U, block=(16, by), interpret=True)
