@@ -160,6 +160,12 @@ def to_metrics(results: dict) -> dict:
             r["grouped_over_vmap"], "x")
         m[f"moe_grouped.combine_hoist_frac_{key}"] = _metric(
             r["combine_hoist_frac"], "frac")
+    for r in results.get("distributed") or []:
+        key = f"M{r['M']}_K{r['K']}_N{r['N']}_D{r['D']}"
+        m[f"distributed.scaling_eff_{key}"] = _metric(r["scaling_eff"], "frac")
+        m[f"distributed.coll_frac_{key}"] = _metric(
+            r["coll_frac"], "frac", higher_is_better=False)
+        m[f"distributed.layout_flip_{key}"] = _metric(r["layout_flip"], "bool")
     for r in results.get("precision") or []:
         m[f"precision.fused_rel_err_{r['algo']}_n{r['n']}"] = _metric(
             r["fused_rel_err"], "rel_err", higher_is_better=False)

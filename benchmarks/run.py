@@ -20,8 +20,9 @@ import traceback
 
 
 def _sections(quick: bool):
-    from . import (e2e_llm, moe_grouped, operator_level, plan_cache,
-                   precision, roofline_fig8, serve_bench, stepwise, train_bwd)
+    from . import (distributed, e2e_llm, moe_grouped, operator_level,
+                   plan_cache, precision, roofline_fig8, serve_bench,
+                   stepwise, train_bwd)
 
     return [
         ("operator_level",
@@ -53,6 +54,12 @@ def _sections(quick: bool):
          lambda: moe_grouped.run(
              shapes=((8, 128, 256, 512),) if quick
              else ((8, 128, 256, 512), (8, 256, 512, 512)))),
+        ("distributed",
+         "Sharded Decision Module: layout pricing at D=8 (v5e model)",
+         lambda: distributed.run(
+             shapes=((4096, 4096, 4096), (8192, 8192, 8192)) if quick
+             else ((4096, 4096, 4096), (8192, 8192, 8192),
+                   (8192, 8192, 32768)))),
         ("precision",
          "IV-F numerical precision: fused vs downcast-H",
          lambda: precision.run(sizes=(64, 128) if quick else (64, 128, 256))),

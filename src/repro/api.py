@@ -33,14 +33,15 @@ from repro.core.engine import (FalconEngine, PlannedWeight, active_config,
 from repro.core.falcon_gemm import (FalconConfig, falcon_dense, falcon_matmul,
                                     grouped_matmul_with_precombined,
                                     matmul_with_precombined, plan,
-                                    plan_batched, plan_training,
+                                    plan_batched, plan_sharded,
+                                    plan_training,
                                     precombine_weights)
 
 __all__ = [
     # context-scoped config
     "use", "current_config", "active_config", "FalconConfig", "FalconEngine",
     # dispatch entry points
-    "dense", "matmul", "dot_general", "einsum", "plan",
+    "dense", "matmul", "dot_general", "einsum", "plan", "plan_sharded",
     # grouped batched dispatch (group-parallel execution)
     "grouped_matmul", "plan_batched", "grouped_expert_shapes",
     "grouped_matmul_with_precombined",

@@ -208,12 +208,56 @@ def _measure_probe(M: int, K: int, N: int, l: LCMA, backend: str, dtype: str,
                             group_size=int(group_size))
 
 
+def measure_collective_bw(size_bytes: int = 8 << 20, reps: int = 3,
+                          warmup: int = 1,
+                          timer: Callable | None = None) -> float | None:
+    """Measure effective per-device collective bandwidth (bytes/s).
+
+    Times a ring all-gather and a reduce-scatter over every local device
+    (simulated host devices included) under ``shard_map`` and reports the
+    slower of the two as bytes-moved-per-device / seconds — the number the
+    sharded decision model divides collective bytes by. Returns ``None`` on
+    single-device hosts, where the profile's static ``link_bw`` remains the
+    fallback.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    D = len(jax.devices())
+    if D < 2:
+        return None
+    timer = timer or best_of_timer(reps=reps, warmup=warmup)
+    mesh = compat.make_mesh((D,), ("coll",))
+    n = max(size_bytes // 4 // D, 1)          # float32 elements per shard
+    x = jnp.ones((D * n,), jnp.float32)
+
+    def ag(xl):
+        return jax.lax.all_gather(xl, "coll", tiled=True)
+
+    def rs(xl):
+        return jax.lax.psum_scatter(xl, "coll", tiled=True)
+
+    with compat.set_mesh(mesh):
+        f_ag = jax.jit(compat.shard_map(ag, in_specs=P("coll"),
+                                        out_specs=P(None), check_vma=False))
+        f_rs = jax.jit(compat.shard_map(rs, in_specs=P(None),
+                                        out_specs=P("coll"), check_vma=False))
+        t_ag = timer(f_ag, x)
+        t_rs = timer(f_rs, x)
+    moved = (D - 1) * n * 4                   # ring model: (D-1)/D of total
+    return moved / max(t_ag, t_rs)
+
+
 def autotune(base: str | HardwareProfile = "cpu_host", backend: str = "jnp",
              shapes: Sequence[tuple[int, int, int]] | None = None,
              dtype: str = "float32", scheme: str = "strassen",
              reps: int = 3, warmup: int = 1,
              timer: Callable | None = None, name: str | None = None,
-             validate: bool = True, group_size: int = 4) -> CalibrationReport:
+             validate: bool = True, group_size: int = 4,
+             collectives: bool = False) -> CalibrationReport:
     """Measure the backend on probe shapes and fit a calibrated profile.
 
     Returns a :class:`CalibrationReport`; ``report.profile`` is registered
@@ -236,6 +280,12 @@ def autotune(base: str | HardwareProfile = "cpu_host", backend: str = "jnp",
     eff = statistics.median(p.eff_est for p in probes)
     flops_add = beta / dec._dtype_bytes(dtype)  # 1 add/elem at effective BW
 
+    coll_bw = base_prof.collective_bw
+    if collectives:
+        measured = measure_collective_bw(reps=reps, warmup=warmup, timer=timer)
+        if measured is not None:
+            coll_bw = measured
+
     prof = dataclasses.replace(
         base_prof,
         name=name or f"{base_prof.name}_autotuned",
@@ -243,6 +293,7 @@ def autotune(base: str | HardwareProfile = "cpu_host", backend: str = "jnp",
         flops_add=flops_add,
         beta=beta,
         lcma_gemm_efficiency=eff,
+        collective_bw=coll_bw,
         dtype_flops=None,         # calibration is per measured dtype
     )
     register_profile(prof)

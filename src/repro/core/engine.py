@@ -356,18 +356,31 @@ def projection_shapes(arch) -> list[tuple[int, int]]:
     return [s for s in shapes if not (s in seen or seen.add(s))]
 
 
-def grouped_expert_shapes(arch, m_tokens: int) -> list[tuple[int, int, int, int]]:
+def grouped_expert_shapes(arch, m_tokens: int,
+                          mesh_shape: dict | None = None,
+                          ) -> list[tuple[int, int, int, int]]:
     """The grouped (E, C, K, N) contractions a MoE ``arch`` dispatches.
 
     For ``m_tokens`` activation rows entering the MoE block, each of the E
     experts sees a capacity-C token block (the same formula ``moe_apply``
     uses), and the three FFN projections run as grouped contractions
     ``E x (C, K) @ (K, N)``. Empty for dense architectures.
+
+    ``mesh_shape`` scales to the PER-SHARD group a device actually runs under
+    expert parallelism: experts divide over the "model" axis (when they do —
+    ``moe_apply``'s own gate) and each shard routes its local token slice, so
+    capacity is computed from the per-data-shard token count.
     """
     E = int(getattr(arch, "num_experts", 0))
     if not E:
         return []
     from .workloads import moe_capacity
+    mesh_shape = mesh_shape or {}
+    nm = int(mesh_shape.get("model", 1))
+    nd = int(mesh_shape.get("data", 1)) * int(mesh_shape.get("pod", 1) or 1)
+    if nm > 1 and E % nm == 0:
+        E //= nm
+    m_tokens = max(-(-m_tokens // nd), 1)
     d = int(arch.d_model)
     ff = int(getattr(arch, "d_ff", 0))
     top_k = int(getattr(arch, "experts_per_token", 0)) or 1
@@ -380,7 +393,8 @@ def grouped_expert_shapes(arch, m_tokens: int) -> list[tuple[int, int, int, int]
 
 
 def warm_buckets(cfg: FalconConfig | None, arch, buckets,
-                 dtype: str | None = None, train: bool = False) -> int:
+                 dtype: str | None = None, train: bool = False,
+                 mesh_shape: dict | None = None) -> int:
     """Pre-plan every projection of ``arch`` at every bucketed M.
 
     The continuous-batching scheduler only ever launches bucket shapes, so
@@ -394,6 +408,10 @@ def warm_buckets(cfg: FalconConfig | None, arch, buckets,
     projection (``decision.backward_shapes``), so one warm pass at
     ``buckets=[batch * seq]`` makes a whole jitted train step — forward and
     planned custom-VJP backward — trace against a hot plan cache.
+
+    ``mesh_shape`` warms the PER-SHARD grouped MoE shapes a multi-device
+    engine dispatches (experts over "model", tokens over "data") instead of
+    the global ones no device ever runs.
     """
     cfg = _resolve(cfg)
     dtype = dtype or str(getattr(arch, "dtype", "bfloat16"))
@@ -415,7 +433,7 @@ def warm_buckets(cfg: FalconConfig | None, arch, buckets,
         # MoE expert FFNs dispatch as grouped contractions (one plan-cache
         # key per grouped shape), so decode/prefill-time MoE traces hit the
         # cache like every dense projection does.
-        for (E, C, K, N) in grouped_expert_shapes(arch, M):
+        for (E, C, K, N) in grouped_expert_shapes(arch, M, mesh_shape):
             plan_batched(E, C, K, N, cfg, dtype)
             d_pre = plan_batched(E, C, K, N, cfg, dtype, precombined_b=True)
             if d_pre.use_lcma:
@@ -439,7 +457,7 @@ def warm_buckets(cfg: FalconConfig | None, arch, buckets,
                          dataclasses.replace(cfg, candidates=(a,)),
                          dtype, precombined_b=True)
                     n += 1
-            for (E, C, K, N) in grouped_expert_shapes(arch, M):
+            for (E, C, K, N) in grouped_expert_shapes(arch, M, mesh_shape):
                 for a in sorted(pre_algos_grouped.get((E, K, N), ())):
                     plan_batched(E, C, K, N,
                                  dataclasses.replace(cfg, candidates=(a,)),

@@ -34,11 +34,20 @@ class HardwareProfile:
     # throughput of the R-batched LCMA GEMM relative to one big GEMM
     # (1.0 on TPU MXU; <1 through XLA-CPU's batched dot — calibrated)
     lcma_gemm_efficiency: float = 1.0
+    # effective per-device collective (all-gather / reduce-scatter) bytes/s,
+    # measured by the autotuner's --collectives probe; 0.0 => not measured,
+    # fall back to the static per-link ICI number.
+    collective_bw: float = 0.0
 
     def flops_for(self, dtype: str) -> float:
         if self.dtype_flops and dtype in self.dtype_flops:
             return self.dtype_flops[dtype]
         return self.flops_mul
+
+    def coll_bw(self) -> float:
+        """Collective bandwidth for the sharded decision model: the measured
+        value when the --collectives probe ran, else the profiled link rate."""
+        return self.collective_bw if self.collective_bw > 0 else self.link_bw
 
     @property
     def ridge_intensity(self) -> float:

@@ -91,7 +91,8 @@ def plan_key(M: int, K: int, N: int, hw: HardwareProfile, dtype: str, *,
              fused: bool = True, precombined_b: bool = False,
              mode: str = "auto", candidates: tuple[str, ...] | None = None,
              max_grid: int = 5, min_speedup: float = 1.0,
-             batch: int = 1, shared_b: bool = False) -> str:
+             batch: int = 1, shared_b: bool = False,
+             layout: str | None = None, n_devices: int = 1) -> str:
     """Cache key for one Decision-Module invocation (local, per-device shape).
 
     ``batch > 1`` keys a *grouped* decision (``plan_batched``): the whole
@@ -99,15 +100,24 @@ def plan_key(M: int, K: int, N: int, hw: HardwareProfile, dtype: str, *,
     per-element keys — and the shared-B (hoisted Combine-B) variant is keyed
     separately because it prices differently. ``batch == 1`` keeps the
     historical key format, so existing persisted caches stay valid.
+
+    ``layout`` keys a *sharded* decision (``plan_sharded``): ``M/K/N`` are
+    then the GLOBAL shape and the key embeds the mesh layout context — the
+    candidate-layout set, the device count and the collective bandwidth the
+    collective term was priced against (so re-probing ``--collectives``
+    invalidates stale sharded plans without touching local ones).
     """
     cands = ",".join(candidates) if candidates is not None else f"grid<={max_grid}"
     shape = f"{M}x{K}x{N}" if batch == 1 else \
         f"g{batch}x{M}x{K}x{N}|sb={int(shared_b)}"
-    return "|".join([
+    parts = [
         f"{hw.name}@{_profile_fingerprint(hw)}", dtype, shape,
         f"mode={mode}", f"fused={int(fused)}", f"pre={int(precombined_b)}",
         f"ms={min_speedup:g}", cands,
-    ])
+    ]
+    if layout is not None:
+        parts.append(f"ly={layout}xD{int(n_devices)}@cb={hw.coll_bw():g}")
+    return "|".join(parts)
 
 
 @contextlib.contextmanager
@@ -155,6 +165,11 @@ def _encode(d: dec.Decision) -> dict:
     if isinstance(d, dec.GroupedDecision):
         out["B"] = d.B
         out["shared_b"] = d.shared_b
+    elif isinstance(d, dec.ShardedDecision):
+        out["ly"] = d.layout
+        out["D"] = d.n_devices
+        out["coll_seconds"] = d.collective_seconds
+        out["local_mnk"] = list(d.local_shape_mnk)
     return out
 
 
@@ -174,6 +189,13 @@ def _decode(payload: dict) -> dec.Decision | None:
             return dec.GroupedDecision(B=int(payload["B"]),
                                        shared_b=bool(payload.get("shared_b")),
                                        **kw)
+        if "ly" in payload:  # sharded entry (plan_sharded)
+            dec.layout_by_name(str(payload["ly"]))  # drop unknown layouts
+            return dec.ShardedDecision(
+                layout=str(payload["ly"]), n_devices=int(payload["D"]),
+                collective_seconds=float(payload["coll_seconds"]),
+                local_shape_mnk=tuple(int(x) for x in payload["local_mnk"]),
+                **kw)
         return dec.Decision(**kw)
     except (KeyError, TypeError, ValueError):
         return None       # unknown scheme / malformed entry: drop, don't crash

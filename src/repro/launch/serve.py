@@ -65,7 +65,13 @@ def main() -> None:
                     help="pre-plan + pre-compile the bucket grid before "
                          "serving (--continuous)")
     ap.add_argument("--no-warm", dest="warm", action="store_false")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="shard the engine over a real (data, model) mesh, "
+                         "e.g. --mesh 1,8 for 8-way tensor parallelism "
+                         "(--continuous); simulate devices on one host with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     args = ap.parse_args()
+    args.mesh_shape = _parse_mesh(args.mesh)
 
     if args.plan_cache:
         cache = plan_cache.configure(path=args.plan_cache)
@@ -80,10 +86,24 @@ def main() -> None:
         plan_cache.flush()
 
 
+def _parse_mesh(spec: str | None) -> dict:
+    """"DATA,MODEL" -> {"data": DATA, "model": MODEL} (empty without --mesh)."""
+    if not spec:
+        return {}
+    parts = [int(x) for x in spec.replace("x", ",").split(",") if x]
+    if len(parts) != 2 or min(parts) < 1:
+        raise SystemExit(f"--mesh expects DATA,MODEL (e.g. 1,8); got {spec!r}")
+    return {"data": parts[0], "model": parts[1]}
+
+
 def _run_continuous(cfg, args) -> None:
     engine = ServeEngine(
         cfg, max_slots=args.max_slots, max_prompt_len=args.prompt_len,
-        max_new_tokens=args.gen, precombine=args.precombine, seed=args.seed)
+        max_new_tokens=args.gen, precombine=args.precombine, seed=args.seed,
+        mesh_shape=args.mesh_shape)
+    if engine.mesh is not None:
+        print(f"mesh: {dict(engine.mesh.shape)} over "
+              f"{len(jax.devices())} visible device(s)")
     print(f"engine: {args.max_slots} slots, cache len {engine.max_len}, "
           f"{engine.n_precombined} weight tensor(s) precombined, buckets "
           f"seq={list(engine.policy.prefill_seq)} "

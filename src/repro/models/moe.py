@@ -124,18 +124,31 @@ def _moe_dense(p, x, top_k, C):
     return y.reshape(B, S, d), _aux_loss(probs, expert_idx, E)
 
 
-def _raw_weight(w):
-    """``shard_map`` in_specs take arrays; PlannedWeights ride as the raw w
-    (the per-device grouped dispatch inside the body re-plans local shapes)."""
+def _shard_operand(w):
+    """(array, in_spec, rebuild) for one stacked expert operand.
+
+    ``shard_map`` in_specs take arrays, so PlannedWeights are unbundled at
+    the boundary: the kept raw weight (E, K, N) — or, for keep_weight=False
+    precombines, the stacked B̃ (E, R, K/k, N/n) — is what crosses into the
+    body, sharded on the leading expert dim. ``rebuild`` re-wraps the local
+    B̃ slice back into a PlannedWeight inside the body, so dropping the raw
+    weights (the point of keep_weight=False: half the expert HBM) no longer
+    forfeits the expert-parallel path.
+    """
     if isinstance(w, engine.PlannedWeight):
-        if w.w is None:
+        if w.w is not None:
+            arr = w.w            # body re-plans the local grouped shapes
+            rebuild = lambda loc: loc  # noqa: E731
+        elif w.bt is not None:
+            arr = w.bt           # offline Combine B̃ shards like the weight
+            rebuild = lambda loc, _pw=w: engine.PlannedWeight(  # noqa: E731
+                w=None, bt=loc, algo=_pw.algo, k=_pw.k, n=_pw.n)
+        else:
             raise ValueError(
-                "MoE expert-parallel (shard_map) path needs the raw expert "
-                "weights, but this PlannedWeight was built with "
-                "keep_weight=False (only B̃ is stored). Precombine MoE "
-                "params with keep_weight=True when serving under a TP mesh.")
-        return w.w
-    return w
+                "MoE expert-parallel (shard_map) path got a PlannedWeight "
+                "with neither raw weights nor a precombined B̃")
+        return arr, P("model", *([None] * (arr.ndim - 1))), rebuild
+    return w, P("model", None, None), lambda loc: loc
 
 
 def _moe_shardmap(p, x, top_k, C_global, mesh):
@@ -152,6 +165,9 @@ def _moe_shardmap(p, x, top_k, C_global, mesh):
     C_local = max(int(np.ceil(C_global / dp)), 8)
 
     xspec = P(dp_axes if dp_axes else None, None, None)
+    wg_arr, wg_spec, wg_rb = _shard_operand(p["moe_gate"])
+    wu_arr, wu_spec, wu_rb = _shard_operand(p["moe_up"])
+    wd_arr, wd_spec, wd_rb = _shard_operand(p["moe_down"])
 
     def body(x_loc, router_loc, wg, wu, wd):
         Bl, Sl, _ = x_loc.shape
@@ -162,7 +178,8 @@ def _moe_shardmap(p, x, top_k, C_global, mesh):
         probs, gate_vals, expert_idx = _route(xt, logits, top_k)
         midx = jax.lax.axis_index("model")
         y = _dispatch_compute_combine(
-            xt, probs, gate_vals, expert_idx, C_local, wg, wu, wd,
+            xt, probs, gate_vals, expert_idx, C_local,
+            wg_rb(wg), wu_rb(wu), wd_rb(wd),
             E_local=E_local, e_offset=midx * E_local)
         # sum each token's k expert contributions across EP shards
         y = jax.lax.psum(y, "model")
@@ -173,12 +190,10 @@ def _moe_shardmap(p, x, top_k, C_global, mesh):
 
     out, aux = compat.shard_map(
         body,
-        in_specs=(xspec, P(None, "model"), P("model", None, None),
-                  P("model", None, None), P("model", None, None)),
+        in_specs=(xspec, P(None, "model"), wg_spec, wu_spec, wd_spec),
         out_specs=(xspec, P()),
         check_vma=False,
-    )(x, p["router"], _raw_weight(p["moe_gate"]), _raw_weight(p["moe_up"]),
-      _raw_weight(p["moe_down"]))
+    )(x, p["router"], wg_arr, wu_arr, wd_arr)
     return out, aux
 
 

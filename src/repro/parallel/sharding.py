@@ -25,7 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import compat
 
 __all__ = ["ShardingRules", "batch_axes", "param_sharding", "activation_specs",
-           "named_sharding", "make_rules"]
+           "named_sharding", "make_rules", "layouts_for_mesh"]
 
 
 def batch_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -157,6 +157,42 @@ def resolve_batch_axes() -> tuple[str, ...]:
     if _STYLE_CTX.get() == "fsdp_only":
         return ("pod", "data", "model")
     return ("pod", "data")
+
+
+def layouts_for_mesh(mesh: Mesh | None = None, style: str | None = None):
+    """Candidate shard layouts for pricing a dense contraction on ``mesh``.
+
+    Returns ``(n_devices, layouts)`` for the shard-aware Decision Module
+    (``falcon_gemm.plan_sharded``). The rule table is the parallel style's:
+
+      * ``"tp"``        — weights shard over the "model" axis; candidates are
+        replicated / column-parallel (all-gather C) / row-parallel
+        (all-reduce C), with D = model-axis size;
+      * ``"fsdp_only"`` — activations shard over every batch axis; candidates
+        are replicated (gather A and B) vs batch-sharded with a weight
+        all-gather, with D = the product of batch-axis sizes.
+
+    Without a mesh (or with a trivial axis) this degenerates to
+    ``(1, (replicated,))`` — the local model.
+    """
+    from repro.core import decision as dec
+
+    if mesh is None:
+        mesh = compat.get_abstract_mesh()
+    if mesh is None:
+        return 1, (dec.layout_by_name("replicated"),)
+    style = style or get_parallel_style()
+    sizes = dict(mesh.shape)
+    if style == "fsdp_only":
+        axes = tuple(a for a in resolve_batch_axes() if a in sizes)
+        d = int(np.prod([sizes[a] for a in axes])) if axes else 1
+        layouts = dec.fsdp_layouts()
+    else:
+        d = int(sizes.get("model", 1))
+        layouts = dec.default_layouts()
+    if d <= 1:
+        return 1, (dec.layout_by_name("replicated"),)
+    return d, layouts
 
 
 def shard_act(x, *spec):

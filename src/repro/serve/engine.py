@@ -23,6 +23,7 @@ eager decode (``tests/test_serve_engine.py``).
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
 
@@ -31,9 +32,11 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.api as falcon
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.core import engine as core_engine, plan_cache
 from repro.models import model as M
+from repro.parallel import sharding as SH
 from repro.train.steps import make_decode_step, make_serve_prefill_step
 
 from .buckets import BucketPolicy, next_pow2
@@ -45,13 +48,22 @@ __all__ = ["ServeEngine", "StepLoop"]
 
 
 class ServeEngine:
-    """Continuous-batching serve engine for one model on the local device.
+    """Continuous-batching serve engine for one model.
 
     ``submit`` is thread-safe (any frontend thread); ``step``/``run`` are the
     single consumer. Families whose state a padded prefill would corrupt
     (SSM/hybrid recurrent state, MoE capacity contention) and non-token
     frontends are rejected — the bucket math is only exact for dense
     KV-cache attention.
+
+    ``mesh_shape={"data": d, "model": m}`` spanning more than one device
+    lifts the engine onto a real mesh: weights shard tensor-parallel by the
+    ``parallel.sharding`` rule table (offline Combine B then runs on sharded
+    weights), the KV cache stays replicated (decode activations gather back
+    each step — "replicated-then-gathered"), and every jitted step runs under
+    the mesh context so FalconGEMM's shard-aware plans and ``shard_act``
+    constraints see it. Simulate devices on one host with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
     """
 
     def __init__(self, model_cfg: ModelConfig, params=None, *,
@@ -70,10 +82,19 @@ class ServeEngine:
         self.max_new_tokens_cap = max_new_tokens
         self.max_len = next_pow2(self.policy.prefill_seq[-1] + max_new_tokens)
         self.record_logits = record_logits
-        self.fcfg = M.falcon_config_for(model_cfg, mesh_shape or {})
-        with falcon.use(self.fcfg):
+        self.mesh_shape = dict(mesh_shape or {})
+        self.mesh = self._build_mesh(self.mesh_shape)
+        self.fcfg = M.falcon_config_for(model_cfg, self.mesh_shape)
+        with falcon.use(self.fcfg), self._mesh_ctx():
             self.params = params if params is not None \
                 else M.init_params(model_cfg, jax.random.PRNGKey(seed))
+            if self.mesh is not None:
+                # Tensor-parallel at rest: shard raw weights by the rule table
+                # BEFORE precombine, so offline Combine B runs on (and its B̃
+                # output inherits) the sharded layout.
+                rules = SH.make_rules(self.mesh)
+                self.params = jax.device_put(
+                    self.params, SH.param_sharding(self.params, self.mesh, rules))
             self.n_precombined = 0
             if precombine:
                 # Offline Combine B priced at the largest prefill bucket M;
@@ -86,11 +107,42 @@ class ServeEngine:
         self.stats = ServeStats()
         self.requests: list[Request] = []
         self.cache = M.init_cache(model_cfg, max_slots, self.max_len)
+        if self.mesh is not None:
+            # Replicated-then-gathered decode: the KV cache lives replicated on
+            # every device; each step's projections run tensor-parallel and the
+            # (small) per-step activations gather back before the cache write.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            self.cache = jax.device_put(
+                self.cache, NamedSharding(self.mesh, P()))
         self.pos = np.zeros(max_slots, np.int32)   # per-slot next write index
         self._prefill_fn = jax.jit(make_serve_prefill_step(model_cfg, self.max_len))
         self._decode_fn = jax.jit(make_decode_step(model_cfg))
         self._compiled: set[tuple] = set()          # step shapes already traced
         self._submit_lock = threading.Lock()
+
+    # -- mesh ----------------------------------------------------------------
+
+    @staticmethod
+    def _build_mesh(mesh_shape: dict):
+        """A real ("data", "model") mesh when ``mesh_shape`` spans > 1 device."""
+        total = 1
+        for v in mesh_shape.values():
+            total *= int(v)
+        if total <= 1:
+            return None
+        ndev = len(jax.devices())
+        if total > ndev:
+            raise ValueError(
+                f"mesh_shape {mesh_shape} needs {total} devices but only "
+                f"{ndev} are visible; simulate with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={total}")
+        d = int(mesh_shape.get("data", 1)) * int(mesh_shape.get("pod", 1))
+        m = int(mesh_shape.get("model", 1))
+        return compat.make_mesh((d, m), ("data", "model"))
+
+    def _mesh_ctx(self):
+        return compat.set_mesh(self.mesh) if self.mesh is not None \
+            else contextlib.nullcontext()
 
     # -- admission ----------------------------------------------------------
 
@@ -123,10 +175,10 @@ class ServeEngine:
            zero inputs, so no live request ever pays a compile.
         """
         t0 = time.perf_counter()
-        with falcon.use(self.fcfg):
+        with falcon.use(self.fcfg), self._mesh_ctx():
             n_plans = core_engine.warm_buckets(
                 self.fcfg, self.cfg, self.policy.bucket_ms(),
-                dtype=str(self.cfg.dtype))
+                dtype=str(self.cfg.dtype), mesh_shape=self.mesh_shape)
             for (b, s) in self.policy.prefill_shapes():
                 jax.block_until_ready(self._prefill_fn(
                     self.params, jnp.zeros((b, s), jnp.int32),
@@ -186,7 +238,7 @@ class ServeEngine:
             toks[i, :r.prompt_len] = r.prompt
             last[i] = r.prompt_len - 1
         t0 = time.perf_counter()
-        with falcon.use(self.fcfg):
+        with falcon.use(self.fcfg), self._mesh_ctx():
             logits, new_cache = self._prefill_fn(
                 self.params, jnp.asarray(toks), jnp.asarray(last))
             jax.block_until_ready(logits)
@@ -220,7 +272,7 @@ class ServeEngine:
             toks[i, 0] = r.generated[-1]
             pos[i] = self.pos[work.slots[i]]
         t0 = time.perf_counter()
-        with falcon.use(self.fcfg):
+        with falcon.use(self.fcfg), self._mesh_ctx():
             rows = jax.tree.map(lambda c: c[:, idx], self.cache)
             logits, new_rows = self._decode_fn(
                 self.params, rows, jnp.asarray(toks), jnp.asarray(pos))
@@ -261,6 +313,9 @@ class ServeEngine:
         d["precombined_weights"] = self.n_precombined
         d["max_len"] = self.max_len
         d["max_slots"] = self.max_slots
+        d["mesh"] = self.mesh_shape or None
+        d["n_devices"] = (1 if self.mesh is None
+                          else int(np.prod(list(dict(self.mesh.shape).values()))))
         return d
 
 

@@ -60,6 +60,11 @@ def main(argv: list[str] | None = None) -> int:
                     help="skip plan-cache warmup")
     ap.add_argument("--warm-dtype", default="bfloat16",
                     help="dtype for plan-cache warmup decisions")
+    ap.add_argument("--collectives", action="store_true",
+                    help="probe effective all-gather/reduce-scatter bandwidth "
+                         "across local devices and record it on the profile "
+                         "(collective_bw — priced by the sharded decision "
+                         "tier); skipped silently on single-device hosts")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: tiny probe shapes, one rep, reduced "
                          "plan-cache warm grid")
@@ -100,7 +105,8 @@ def main(argv: list[str] | None = None) -> int:
     report, path = autotune.calibrate(
         path=args.out, base=args.hardware, backend=args.backend,
         shapes=args.shape, dtype=args.dtype, scheme=args.scheme,
-        reps=args.reps, warmup=args.warmup, name=args.name)
+        reps=args.reps, warmup=args.warmup, name=args.name,
+        collectives=args.collectives)
     prof = report.profile
 
     def tera(x):
@@ -115,6 +121,13 @@ def main(argv: list[str] | None = None) -> int:
     print(f"  {'beta (bytes/s)':24s} {tera(base.beta)} {tera(prof.beta)}")
     print(f"  {'lcma_gemm_efficiency':24s} {base.lcma_gemm_efficiency:10.3f} "
           f"{prof.lcma_gemm_efficiency:10.3f}")
+    if args.collectives:
+        if prof.collective_bw > 0:
+            print(f"  {'collective_bw (bytes/s)':24s} {tera(base.coll_bw())} "
+                  f"{tera(prof.collective_bw)}")
+        else:
+            print(f"  collective probe skipped: single local device "
+                  f"(link_bw fallback {tera(base.coll_bw())})")
     if report.max_rel_err is not None:
         print(f"  model-vs-measured pipeline rel.err: "
               f"max {report.max_rel_err:.1%} over {len(report.model_rel_err)} probes")

@@ -9,18 +9,39 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# Modules whose tests exercise mesh/shard_map behavior. They are auto-marked
+# ``mesh`` so CI can run them as a dedicated simulated-mesh tier
+# (``pytest -m mesh`` under the distributed job); they also run in tier-1.
+MESH_TEST_MODULES = {"test_sharding", "test_shardmap_local", "test_distributed"}
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        mod = getattr(item, "module", None)
+        if mod is not None and mod.__name__ in MESH_TEST_MODULES:
+            item.add_marker(pytest.mark.mesh)
+
 
 def run_multidevice(code: str, n_devices: int = 8, timeout: int = 300) -> str:
     """Run python code in a subprocess with N virtual host devices.
 
     Tests in this process must see the real single device (per the dry-run
     isolation rule), so multi-device behavior is exercised out-of-process.
+    The subprocess asserts it actually sees ``n_devices`` before running the
+    test body — an unset/ignored XLA flag must fail loudly, not let a mesh
+    test silently pass on 1 device.
     """
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    guard = textwrap.dedent(f"""\
+        import jax as _jax_guard
+        assert len(_jax_guard.devices()) == {n_devices}, (
+            "simulated mesh not in effect: expected {n_devices} devices, got "
+            f"{{len(_jax_guard.devices())}} — XLA_FLAGS was not honored")
+        """)
     out = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
+        [sys.executable, "-c", guard + textwrap.dedent(code)],
         capture_output=True, text=True, timeout=timeout, env=env,
     )
     assert out.returncode == 0, f"subprocess failed:\n{out.stdout}\n{out.stderr}"

@@ -1,0 +1,70 @@
+"""Per-config smoke matrix: falcon.dot_general fwd+bwd for every registry arch.
+
+"Works on granite" must not stand in for "works": every architecture in
+``configs/registry.py`` (mamba2/SSD, MoE, pixtral, musicgen, kimi_k2, ...)
+contributes its own projection shapes — attention/MLP/SSM/vocab, plus the
+grouped MoE expert shapes — and each is pushed through the planned
+``falcon.dot_general`` forward AND backward at a tiny M, with the scheme
+forced so the LCMA path (not the GEMM fallback) is what gets exercised.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as falcon
+from repro.configs import registry
+from repro.core import engine as core_engine
+
+# Forced strassen + jnp backend: tiny shapes would otherwise always take the
+# plain-GEMM fallback and the matrix would prove nothing about the combines.
+FCFG = falcon.FalconConfig(mode="strassen", backend="jnp", use_plan_cache=False)
+DN = (((1,), (0,)), ((), ()))          # (M, K) @ (K, N)
+
+
+def _shapes_for(cfg, cap: int = 256):
+    """A few representative (K, N) projections, dims capped for CPU speed."""
+    shapes = core_engine.projection_shapes(cfg)
+    return [(min(k, cap), min(n, cap)) for (k, n) in shapes[:4]]
+
+
+@pytest.mark.parametrize("arch", registry.list_archs())
+def test_dot_general_fwd_bwd_per_config(arch, rng):
+    cfg = registry.smoke_config(arch)
+    with falcon.use(FCFG):
+        for (K, N) in _shapes_for(cfg):
+            x = jnp.asarray(rng.standard_normal((8, K)), jnp.float32)
+            w = jnp.asarray(rng.standard_normal((K, N)) * 0.1, jnp.float32)
+            y = falcon.dot_general(x, w, DN)
+            ref = np.asarray(x) @ np.asarray(w)
+            np.testing.assert_allclose(np.asarray(y), ref, atol=2e-3)
+
+            gx, gw = jax.grad(
+                lambda a, b: jnp.sum(falcon.dot_general(a, b, DN) ** 2),
+                argnums=(0, 1))(x, w)
+            gx0, gw0 = jax.grad(
+                lambda a, b: jnp.sum((a @ b) ** 2), argnums=(0, 1))(x, w)
+            np.testing.assert_allclose(np.asarray(gx), np.asarray(gx0),
+                                       atol=5e-2, rtol=1e-3)
+            np.testing.assert_allclose(np.asarray(gw), np.asarray(gw0),
+                                       atol=5e-2, rtol=1e-3)
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in registry.list_archs()
+             if getattr(registry.smoke_config(a), "num_experts", 0)])
+def test_grouped_expert_matmul_per_moe_config(arch, rng):
+    """MoE archs additionally smoke their grouped E x (C, K) @ (K, N) path."""
+    cfg = registry.smoke_config(arch)
+    (E, C, K, N) = core_engine.grouped_expert_shapes(cfg, m_tokens=16)[0]
+    E, C, K, N = min(E, 4), min(C, 16), min(K, 128), min(N, 128)
+    x = jnp.asarray(rng.standard_normal((E, C, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((E, K, N)) * 0.1, jnp.float32)
+    with falcon.use(FCFG):
+        y = falcon.grouped_matmul(x, w)
+        g = jax.grad(lambda a: jnp.sum(falcon.grouped_matmul(a, w) ** 2))(x)
+    ref = np.einsum("eck,ekn->ecn", np.asarray(x), np.asarray(w))
+    np.testing.assert_allclose(np.asarray(y), ref, atol=2e-3)
+    g0 = jax.grad(lambda a: jnp.sum(jnp.einsum("eck,ekn->ecn", a, w) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g0),
+                               atol=5e-2, rtol=1e-3)

@@ -1,0 +1,88 @@
+"""Property-based tests of the Decision Module's pricing invariants.
+
+Via ``tests/_propcheck`` (real hypothesis when installed, deterministic
+corner+seeded sampling otherwise): estimate monotonicity in each dimension,
+the grouped eff_B amortization bounds, plan-key uniqueness across the
+batch/shared_b/layout parameter space, and the sharded tier's lower bound
+(local-only time) when collectives are free.
+"""
+import dataclasses
+
+from _propcheck import given, settings, st
+
+from repro.core import decision as dec, plan_cache
+from repro.core.algorithms import candidates
+from repro.core.hardware import CPU_HOST, TPU_V5E
+
+STRASSEN = candidates()[0]
+DIMS = st.integers(1, 4096)
+PROFILES = st.sampled_from([TPU_V5E, CPU_HOST])
+
+
+@settings(max_examples=40)
+@given(DIMS, DIMS, DIMS, st.integers(1, 2048), PROFILES)
+def test_gemm_and_estimate_monotone_in_each_dim(M, N, K, step, hw):
+    """Growing any of M/N/K never makes GEMM or an LCMA estimate cheaper."""
+    base_g = dec.gemm_time(M, N, K, hw)
+    base_e = dec.estimate(STRASSEN, M, N, K, hw).time
+    for grown in ((M + step, N, K), (M, N + step, K), (M, N, K + step)):
+        assert dec.gemm_time(*grown, hw) >= base_g
+        assert dec.estimate(STRASSEN, *grown, hw).time >= base_e
+
+
+@settings(max_examples=40)
+@given(st.integers(1, 4096), st.floats(1e-3, 1.0))
+def test_grouped_eff_b_bounded(B, eff):
+    """eff_B = B*eff/(B*eff + 1 - eff) lies in [eff, 1] and grows with B."""
+    eff_b = B * eff / (B * eff + 1.0 - eff)
+    assert eff - 1e-12 <= eff_b <= 1.0 + 1e-12
+    eff_b2 = (B + 1) * eff / ((B + 1) * eff + 1.0 - eff)
+    assert eff_b2 >= eff_b - 1e-12
+
+
+@settings(max_examples=60)
+@given(st.integers(1, 512), st.integers(1, 512), st.integers(1, 512),
+       st.integers(1, 8), st.sampled_from([False, True]),
+       st.sampled_from([None, "replicated", "col", "row", "data"]),
+       st.integers(1, 8))
+def test_plan_key_uniqueness(M, K, N, batch, shared_b, layout, n_devices):
+    """Distinct (shape, batch, shared_b, layout, D) never collide in the key.
+
+    The key must be injective over every parameter combination the planners
+    emit: a collision would hand one configuration another's cached plan.
+    """
+    seen = getattr(test_plan_key_uniqueness, "_seen", None)
+    if seen is None:
+        seen = test_plan_key_uniqueness._seen = {}
+    # normalize params the key intentionally does not distinguish: shared_b
+    # only prices (and keys) grouped decisions, n_devices only sharded ones
+    params = (M, K, N, batch, shared_b if batch > 1 else False, layout,
+              n_devices if layout is not None else 1)
+    key = plan_cache.plan_key(M, K, N, TPU_V5E, "bfloat16", batch=batch,
+                              shared_b=shared_b, layout=layout,
+                              n_devices=n_devices)
+    assert seen.setdefault(key, params) == params, \
+        f"plan_key collision: {key!r} for {params} and {seen[key]}"
+
+
+@settings(max_examples=40)
+@given(st.integers(1, 4096), st.integers(1, 4096), st.integers(1, 4096),
+       st.integers(2, 16),
+       st.sampled_from(["replicated", "col", "row", "gathered", "data"]))
+def test_sharded_estimate_bounded_below_by_local(M, N, K, D, layout_name):
+    """Sharded >= local on the same local shape; equal when collectives free.
+
+    The collective term can only add time: with infinite collective bandwidth
+    the sharded estimate must equal the pure local estimate of the layout's
+    per-shard shape, and with any finite bandwidth it must dominate it.
+    """
+    ly = dec.layout_by_name(layout_name)
+    local = dec.estimate(STRASSEN, *ly.local_shape(M, N, K, D), TPU_V5E).time
+    free = dataclasses.replace(TPU_V5E, collective_bw=float("inf"))
+    est_free = dec.estimate_sharded(STRASSEN, M, N, K, free,
+                                    layout=ly, n_devices=D)
+    assert abs(est_free.time - local) <= 1e-12 * max(local, 1.0)
+    est_paid = dec.estimate_sharded(STRASSEN, M, N, K, TPU_V5E,
+                                    layout=ly, n_devices=D)
+    assert est_paid.time >= local
+    assert est_paid.collective.time >= 0.0

@@ -51,6 +51,40 @@ def test_moe_shardmap_equals_dense():
     assert "MOE_OK" in out
 
 
+def test_moe_shardmap_precombined_without_raw_weight():
+    """keep_weight=False expert PlannedWeights must shard over the mesh.
+
+    The B̃-only precombine drops the raw (E, K, N) arrays to halve expert
+    HBM; the shard_map path used to raise on it, forcing keep_weight=True
+    under any TP mesh. Now the stacked B̃ crosses the boundary (sharded on
+    the expert dim) and is re-wrapped per device.
+    """
+    out = run_multidevice("""
+        import jax, jax.numpy as jnp, numpy as np
+        import repro.api as falcon
+        from repro import compat
+        from repro.core import engine
+        from repro.models import moe as MOE
+        p = MOE.moe_init(jax.random.PRNGKey(0), 32, 64, 8, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
+        cfg = falcon.FalconConfig(mode="strassen", backend="jnp",
+                                  use_plan_cache=False)
+        with falcon.use(cfg):
+            for k in ("moe_gate", "moe_up", "moe_down"):
+                p[k] = engine.plan_weight(p[k], keep_weight=False, grouped=True)
+                assert p[k].w is None and p[k].bt is not None, k
+            y0, _ = MOE._moe_dense(p, x, 2, 256)
+            mesh = compat.make_mesh((4, 2), ("data", "model"))
+            with compat.set_mesh(mesh):
+                y1, _ = jax.jit(lambda p_, x_: MOE.moe_apply(
+                    p_, x_, 2, 1.25, deterministic_capacity=256))(p, x)
+        err = float(jnp.max(jnp.abs(y0 - y1)))
+        assert err < 1e-4, err
+        print("MOE_PRE_OK", err)
+    """)
+    assert "MOE_PRE_OK" in out
+
+
 def test_compressed_psum_accuracy_and_train_step():
     out = run_multidevice("""
         import jax, jax.numpy as jnp, numpy as np
