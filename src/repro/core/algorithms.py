@@ -58,18 +58,35 @@ def _from_terms(name, m, k, n, terms, cexprs) -> LCMA:
 
     ``terms``: list of (a_lin, b_lin) where a_lin maps (i,l)->coeff and
     b_lin maps (l,j)->coeff.   ``cexprs``: maps (i,j) -> {r: coeff}.
+    Out-of-range indices raise ``ValueError`` naming the offending term —
+    a transcribed listing with a bad index must fail loudly, not wrap
+    around via negative indexing into the wrong coefficient slot.
     """
     R = len(terms)
+    if R < 1:
+        raise ValueError(f"_from_terms({name}): empty term list")
     U = np.zeros((R, m, k), np.int8)
     V = np.zeros((R, k, n), np.int8)
     W = np.zeros((R, m, n), np.int8)
     for r, (al, bl) in enumerate(terms):
         for (i, l), c in al.items():
+            if not (0 <= i < m and 0 <= l < k):
+                raise ValueError(f"_from_terms({name}): term {r} indexes "
+                                 f"A[{i},{l}] outside the {m}x{k} grid")
             U[r, i, l] = c
         for (l, j), c in bl.items():
+            if not (0 <= l < k and 0 <= j < n):
+                raise ValueError(f"_from_terms({name}): term {r} indexes "
+                                 f"B[{l},{j}] outside the {k}x{n} grid")
             V[r, l, j] = c
     for (i, j), combo in cexprs.items():
+        if not (0 <= i < m and 0 <= j < n):
+            raise ValueError(f"_from_terms({name}): output C[{i},{j}] outside "
+                             f"the {m}x{n} grid")
         for r, c in combo.items():
+            if not (0 <= r < R):
+                raise ValueError(f"_from_terms({name}): C[{i},{j}] references "
+                                 f"product term {r} outside 0..{R - 1}")
             W[r, i, j] = c
     return LCMA(name, m, k, n, R, U, V, W)
 
@@ -174,9 +191,18 @@ def tensor_product(l1: LCMA, l2: LCMA, name: str | None = None) -> LCMA:
     return LCMA(name or f"({l1.name})x({l2.name})", m, k, n, R, U, V, W)
 
 
+def _require_matching(op: str, l1: LCMA, l2: LCMA, dims1, dims2, what: str):
+    # bare asserts here disappeared under ``python -O``, letting incompatible
+    # grids concatenate into a silently-wrong scheme
+    if dims1 != dims2:
+        raise ValueError(
+            f"{op}: incompatible grids — {l1.name} <{l1.m},{l1.k},{l1.n}> vs "
+            f"{l2.name} <{l2.m},{l2.k},{l2.n}> (need matching {what})")
+
+
 def concat_n(l1: LCMA, l2: LCMA, name: str | None = None) -> LCMA:
     """C = [A B1 | A B2]: <m,k,n1+n2>; R1+R2."""
-    assert (l1.m, l1.k) == (l2.m, l2.k)
+    _require_matching("concat_n", l1, l2, (l1.m, l1.k), (l2.m, l2.k), "(m, k)")
     m, k = l1.m, l1.k
     n = l1.n + l2.n
     R = l1.R + l2.R
@@ -192,7 +218,7 @@ def concat_n(l1: LCMA, l2: LCMA, name: str | None = None) -> LCMA:
 
 def concat_m(l1: LCMA, l2: LCMA, name: str | None = None) -> LCMA:
     """Row-stacked C: <m1+m2,k,n>; R1+R2."""
-    assert (l1.k, l1.n) == (l2.k, l2.n)
+    _require_matching("concat_m", l1, l2, (l1.k, l1.n), (l2.k, l2.n), "(k, n)")
     k, n = l1.k, l1.n
     m = l1.m + l2.m
     R = l1.R + l2.R
@@ -208,7 +234,7 @@ def concat_m(l1: LCMA, l2: LCMA, name: str | None = None) -> LCMA:
 
 def concat_k(l1: LCMA, l2: LCMA, name: str | None = None) -> LCMA:
     """C = A1 B1 + A2 B2 (K split): <m,k1+k2,n>; R1+R2."""
-    assert (l1.m, l1.n) == (l2.m, l2.n)
+    _require_matching("concat_k", l1, l2, (l1.m, l1.n), (l2.m, l2.n), "(m, n)")
     m, n = l1.m, l1.n
     k = l1.k + l2.k
     R = l1.R + l2.R
@@ -228,7 +254,8 @@ def transpose_dual(l: LCMA, name: str | None = None) -> LCMA:
     V = np.ascontiguousarray(np.transpose(l.U, (0, 2, 1)))
     W = np.ascontiguousarray(np.transpose(l.W, (0, 2, 1)))
     out = LCMA(name or f"{l.name}^T", l.n, l.k, l.m, l.R, U, V, W)
-    assert validate(out), f"transpose_dual({l.name}) failed validation"
+    if not validate(out):
+        raise ValueError(f"transpose_dual({l.name}) failed validation")
     return out
 
 
@@ -324,10 +351,12 @@ def register(l: LCMA, overwrite: bool = False) -> LCMA:
     constructor already vetted the coefficient *domain* (integer, int8
     range): an externally sourced listing (AlphaTensor standard-arithmetic,
     Smirnov ⟨3,3,6⟩) with |c| > 1 coefficients must prove it actually
-    multiplies matrices before the dispatcher may pick it.
+    multiplies matrices before the dispatcher may pick it. The check is the
+    exact Brent-equation verifier (``repro.analysis.brent``): a rejection
+    names the violated equations, not just "failed".
     """
-    if not validate(l):
-        raise ValueError(f"LCMA {l.name} {l.key} failed the tensor identity")
+    from repro.analysis.brent import verify_or_raise
+    verify_or_raise(l, context=f"register({l.name!r})")
     lib = library()
     if l.name in lib and not overwrite:
         raise ValueError(f"LCMA {l.name!r} already registered "

@@ -167,6 +167,23 @@ def _resolve_hw(hw: HardwareProfile | str) -> HardwareProfile:
     return get_profile(hw) if isinstance(hw, str) else hw
 
 
+def _filter_by_budget(candidates: list[LCMA], accuracy_budget: float | None,
+                      dtype: str) -> list[LCMA]:
+    """Drop candidates whose static error bound exceeds the budget.
+
+    ``accuracy_budget`` is an absolute relative-error ceiling for the call
+    site (same units as ``SchemeStability.error_bound``: a multiple of 1.0,
+    not of ulp). ``None`` disables the filter. The bound comes from the
+    ``stability`` pass of falcon-check (Higham-style growth computed from the
+    coefficient tensors alone), so rejection is static — no kernel runs, no
+    sampling.
+    """
+    if accuracy_budget is None:
+        return candidates
+    return [l for l in candidates
+            if l.stability.within_budget(accuracy_budget, dtype)]
+
+
 def gemm_time(M: int, N: int, K: int, hw: HardwareProfile | str,
               dtype: str = "bfloat16") -> float:
     """Standard GEMM roofline time (Eq. 8 dichotomy)."""
@@ -240,17 +257,24 @@ def decide(M: int, N: int, K: int, hw: HardwareProfile | str, dtype: str = "bflo
            candidates: list[LCMA] | None = None, fused: bool = True,
            precombined_b: bool = False,
            pad_multiple: tuple[int, int, int] = (1, 1, 1),
-           min_speedup: float = 1.0) -> Decision:
+           min_speedup: float = 1.0,
+           accuracy_budget: float | None = None) -> Decision:
     """Select the best LCMA for (M, N, K) or fall back to standard GEMM.
 
     ``hw`` may be a ``HardwareProfile`` or a profile *name*; names resolve
     through ``hardware.get_profile``, which also finds calibrated profiles
     written to disk by the autotuner (``python -m repro.tools.tune``).
+
+    ``accuracy_budget`` statically rejects candidates whose Higham-style
+    error bound (``l.stability.error_bound(dtype)``) exceeds the given
+    relative-error ceiling; filtered-out schemes never get priced, so a
+    numerically aggressive scheme cannot win on speed alone.
     """
     hw = _resolve_hw(hw)
     t_gemm = gemm_time(M, N, K, hw, dtype)
     if candidates is None:
         candidates = algorithms.candidates()
+    candidates = _filter_by_budget(candidates, accuracy_budget, dtype)
     if eq8_is_memory_bound(M, N, K, hw, dtype):
         # Eq. 8 fast path: memory-bound GEMM => LCMA cannot win.
         return Decision(M, N, K, dtype, None, t_gemm, None, ())
@@ -368,17 +392,20 @@ def decide_batched(B: int, M: int, N: int, K: int, hw: HardwareProfile | str,
                    candidates: list[LCMA] | None = None, fused: bool = True,
                    precombined_b: bool = False, shared_b: bool = False,
                    pad_multiple: tuple[int, int, int] = (1, 1, 1),
-                   min_speedup: float = 1.0) -> GroupedDecision:
+                   min_speedup: float = 1.0,
+                   accuracy_budget: float | None = None) -> GroupedDecision:
     """Select the best LCMA for a grouped contraction, or batched GEMM.
 
     The grouped analogue of :func:`decide`: one Decision for the whole
     ``B x (M, K) @ (K, N)`` group. ``B=1`` degenerates to the 2-D model
-    (same estimates as ``decide``).
+    (same estimates as ``decide``). ``accuracy_budget`` filters candidates
+    by static error bound exactly as in :func:`decide`.
     """
     hw = _resolve_hw(hw)
     t_gemm = gemm_time_batched(B, M, N, K, hw, dtype, shared_b=shared_b)
     if candidates is None:
         candidates = algorithms.candidates()
+    candidates = _filter_by_budget(candidates, accuracy_budget, dtype)
     if batched_is_memory_bound(B, M, N, K, hw, dtype, shared_b=shared_b):
         return GroupedDecision(M, N, K, dtype, None, t_gemm, None, (),
                                B=B, shared_b=shared_b)
@@ -591,7 +618,8 @@ def decide_sharded(M: int, N: int, K: int, hw: HardwareProfile | str,
                    candidates: list[LCMA] | None = None, fused: bool = True,
                    precombined_b: bool = False,
                    pad_multiple: tuple[int, int, int] = (1, 1, 1),
-                   min_speedup: float = 1.0) -> ShardedDecision:
+                   min_speedup: float = 1.0,
+                   accuracy_budget: float | None = None) -> ShardedDecision:
     """Pick the best (layout, algorithm) pair for a distributed contraction.
 
     The layout axis widens :func:`decide`'s search: every candidate layout is
@@ -610,7 +638,7 @@ def decide_sharded(M: int, N: int, K: int, hw: HardwareProfile | str,
         t_coll = collective_cost(ly, M, N, K, n_devices, hw, dtype).time
         d = decide(Ml, Nl, Kl, hw, dtype, candidates=candidates, fused=fused,
                    precombined_b=precombined_b, pad_multiple=pad_multiple,
-                   min_speedup=min_speedup)
+                   min_speedup=min_speedup, accuracy_budget=accuracy_budget)
         sd = ShardedDecision(
             M, N, K, dtype, d.algo,
             d.gemm_seconds + t_coll,

@@ -7,7 +7,10 @@ its rank-23 <3,3,3> (Laderman-family) coefficients offline. Method:
   1. alternating least squares on U, V, W (each factor solve is linear),
   2. an increasing ridge penalty pulling entries toward round(x) in {-1,0,1}
      (the homotopy: lam 0 -> 3.0),
-  3. final projection + exact validation against the matmul tensor identity.
+  3. final projection + EXACT verification of the Brent equations
+     (``repro.analysis.brent`` — integer arithmetic, no float tolerance), so
+     a candidate that survives this function is certified, not just
+     numerically spot-checked, before it can reach ``algorithms.register()``.
 
 Not a training-time component — a tool for growing ``S_LCMA`` beyond the
 built-in library (``discover(3, 3, 3, 23)`` reproduces rank-23 in minutes on
@@ -15,20 +18,19 @@ this container; small cases like <2,2,2>;7 take seconds).
 """
 from __future__ import annotations
 
+import logging
+
 import numpy as np
 
-from .lcma import LCMA, validate
+from .lcma import LCMA, matmul_tensor
+
+log = logging.getLogger(__name__)
 
 __all__ = ["discover"]
 
 
 def _target(m: int, k: int, n: int) -> np.ndarray:
-    E = np.zeros((m, k, k, n, m, n))
-    for i in range(m):
-        for a in range(k):
-            for j in range(n):
-                E[i, a, a, j, i, j] = 1
-    return E
+    return matmul_tensor(m, k, n).astype(float)
 
 
 def _solve(G: np.ndarray, Ep: np.ndarray, d1: int, d2: int, lam: float,
@@ -81,6 +83,13 @@ def discover(m: int, k: int, n: int, R: int, *, restarts: int = 20,
                         rnd(W).astype(np.int8))
         except ValueError:
             continue
-        if validate(cand):
+        # Exact Brent-equation gate (falcon-check pass 1): only a scheme with
+        # ZERO violated equations may escape discovery. A near-miss iterate
+        # is logged with the violation count so a long search is debuggable.
+        from repro.analysis.brent import check_scheme
+        findings = check_scheme(cand)
+        if not findings:
             return cand
+        log.debug("discover(%d,%d,%d;R=%d) restart %d: %s",
+                  m, k, n, R, restart, findings[0].message)
     return None

@@ -54,6 +54,11 @@ class FalconConfig:
     candidates: tuple[str, ...] | None = None
     min_speedup: float = 1.02        # require a predicted >=2% win before switching
     max_grid: int = 5
+    # Static numerical-accuracy ceiling for this call site: candidates whose
+    # Higham-style relative-error bound (``LCMA.stability.error_bound``)
+    # exceeds the budget are rejected BEFORE pricing (falcon-check's
+    # ``stability`` pass, read by the Decision Module). None disables.
+    accuracy_budget: float | None = None
     # Per-device scaling of (M, K, N) under pjit: number of shards per dim.
     shards: tuple[int, int, int] = (1, 1, 1)
     # Memoize auto-mode Decisions in the process plan cache (serving hot path
@@ -157,13 +162,15 @@ def plan(M: int, K: int, N: int, cfg: FalconConfig, dtype: str = "bfloat16",
             Ml, Kl, Nl, cfg.profile, dtype, fused=cfg.fused,
             precombined_b=precombined_b, mode=cfg.mode,
             candidates=cfg.candidates, max_grid=cfg.max_grid,
-            min_speedup=cfg.min_speedup)
+            min_speedup=cfg.min_speedup,
+            accuracy_budget=cfg.accuracy_budget)
         hit = cache.lookup(key)
         if hit is not None:
             return hit
     d = dec.decide(Ml, Nl, Kl, cfg.profile, dtype,
                    candidates=cfg.candidate_schemes(), fused=cfg.fused,
-                   precombined_b=precombined_b, min_speedup=cfg.min_speedup)
+                   precombined_b=precombined_b, min_speedup=cfg.min_speedup,
+                   accuracy_budget=cfg.accuracy_budget)
     if cache is not None:
         cache.insert(key, d)
     return d
@@ -227,6 +234,7 @@ def plan_sharded(M: int, K: int, N: int, cfg: FalconConfig,
             precombined_b=precombined_b, mode=cfg.mode,
             candidates=cfg.candidates, max_grid=cfg.max_grid,
             min_speedup=cfg.min_speedup,
+            accuracy_budget=cfg.accuracy_budget,
             layout=",".join(l.name for l in layouts), n_devices=n_devices)
         hit = cache.lookup(key)
         if isinstance(hit, dec.ShardedDecision):
@@ -234,7 +242,8 @@ def plan_sharded(M: int, K: int, N: int, cfg: FalconConfig,
     d = dec.decide_sharded(M, N, K, cfg.profile, dtype, n_devices=n_devices,
                            layouts=layouts, candidates=cand,
                            fused=cfg.fused, precombined_b=precombined_b,
-                           min_speedup=cfg.min_speedup)
+                           min_speedup=cfg.min_speedup,
+                           accuracy_budget=cfg.accuracy_budget)
     if cache is not None:
         cache.insert(key, d)
     return d
@@ -280,14 +289,16 @@ def plan_batched(B: int, M: int, K: int, N: int, cfg: FalconConfig,
             Ml, Kl, Nl, cfg.profile, dtype, fused=cfg.fused,
             precombined_b=precombined_b, mode=cfg.mode,
             candidates=cfg.candidates, max_grid=cfg.max_grid,
-            min_speedup=cfg.min_speedup, batch=B, shared_b=shared_b)
+            min_speedup=cfg.min_speedup, batch=B, shared_b=shared_b,
+            accuracy_budget=cfg.accuracy_budget)
         hit = cache.lookup(key)
         if isinstance(hit, dec.GroupedDecision):
             return hit
     d = dec.decide_batched(B, Ml, Nl, Kl, cfg.profile, dtype,
                            candidates=cfg.candidate_schemes(), fused=cfg.fused,
                            precombined_b=precombined_b, shared_b=shared_b,
-                           min_speedup=cfg.min_speedup)
+                           min_speedup=cfg.min_speedup,
+                           accuracy_budget=cfg.accuracy_budget)
     if cache is not None:
         cache.insert(key, d)
     return d

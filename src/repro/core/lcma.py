@@ -17,11 +17,12 @@ expresses the <m,k,n> matrix-multiplication tensor with rank R").
 from __future__ import annotations
 
 import dataclasses
-from functools import cached_property
+import hashlib
+from functools import cached_property, lru_cache
 
 import numpy as np
 
-__all__ = ["LCMA", "validate", "apply_reference"]
+__all__ = ["LCMA", "validate", "apply_reference", "matmul_tensor"]
 
 
 def _check_coefficients(name: str, which: str, arr) -> np.ndarray:
@@ -108,6 +109,33 @@ class LCMA:
     def key(self) -> str:
         return f"<{self.m},{self.k},{self.n}>;R={self.R}"
 
+    @cached_property
+    def fingerprint(self) -> str:
+        """Content hash of the scheme *definition* (grid, rank, U/V/W).
+
+        Two schemes with the same name but different coefficients get
+        different fingerprints — the plan cache persists this next to the
+        scheme name so `falcon-check` can prove a cached decision still
+        refers to the definition that priced it.
+        """
+        h = hashlib.sha1()
+        h.update(f"<{self.m},{self.k},{self.n}>;R={self.R};".encode())
+        for t in (self.U, self.V, self.W):
+            h.update(t.tobytes())
+        return h.hexdigest()[:12]
+
+    @cached_property
+    def stability(self):
+        """Static error-growth profile (``repro.analysis.stability``).
+
+        Lazily computed and cached on the (frozen, long-lived) scheme object;
+        the Decision Module reads it to reject candidates whose error bound
+        exceeds a call site's accuracy budget without touching the analyzer
+        package at import time.
+        """
+        from repro.analysis.stability import analyze
+        return analyze(self)
+
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"LCMA({self.name}, {self.key}, |U|={self.nnz_u}, |V|={self.nnz_v}, |W|={self.nnz_w})"
 
@@ -115,23 +143,49 @@ class LCMA:
         return validate(self)
 
 
-def validate(l: LCMA, atol: float = 0.0) -> bool:
-    """Exhaustively check the bilinear identity for scheme ``l``.
+@lru_cache(maxsize=64)
+def matmul_tensor(m: int, k: int, n: int) -> np.ndarray:
+    """The <m,k,n> matrix-multiplication tensor ``d(i,i') d(j,j') d(l,l')``.
 
-    T[i,l, l',j, i',j'] = sum_r U[r,i,l] V[r,l',j] W[r,i',j'] must equal the
-    <m,k,n> matmul tensor  d(i,i') d(j,j') d(l,l').
+    Axes ``(i, l, l', j, i', j')``, int64. The shared ground truth for
+    ``validate``, the discovery ALS target and the exact Brent verifier
+    (``repro.analysis.brent``). Cached and marked read-only — callers that
+    need a float/writable copy must copy.
     """
-    U = l.U.astype(np.int64)
-    V = l.V.astype(np.int64)
-    W = l.W.astype(np.int64)
-    T = np.einsum("ria,rbj,rcd->riabjcd".replace("riabjcd", "iabjcd"), U, V, W)
-    # T has axes (i, a=l, b=l', j, c=i', d=j')
-    m, k, n = l.m, l.k, l.n
     expect = np.zeros((m, k, k, n, m, n), dtype=np.int64)
     for i in range(m):
         for a in range(k):
             for j in range(n):
                 expect[i, a, a, j, i, j] = 1
+    expect.setflags(write=False)
+    return expect
+
+
+def validate(l: LCMA, atol: float | None = None) -> bool:
+    """Exhaustively check the bilinear identity for scheme ``l``.
+
+    T[i,l, l',j, i',j'] = sum_r U[r,i,l] V[r,l',j] W[r,i',j'] must equal the
+    <m,k,n> matmul tensor  d(i,i') d(j,j') d(l,l').
+
+    The default (``atol=None``) is the EXACT integer path: ``LCMA``'s
+    constructor guarantees int8 coefficients, so the identity is decided in
+    int64 arithmetic with no tolerance — a pass is a certificate, not a
+    float comparison (|T| <= R * 127**3 cannot overflow int64). Passing an
+    explicit ``atol`` selects the float64 path, kept for validating
+    *prospective* non-integer decompositions (e.g. un-rounded ALS iterates)
+    before they are projected onto an integer scheme.
+    """
+    expect = matmul_tensor(l.m, l.k, l.n)
+    if atol is None:
+        U = l.U.astype(np.int64)
+        V = l.V.astype(np.int64)
+        W = l.W.astype(np.int64)
+        T = np.einsum("ria,rbj,rcd->iabjcd", U, V, W)
+        return bool(np.array_equal(T, expect))
+    U = np.asarray(l.U, dtype=np.float64)
+    V = np.asarray(l.V, dtype=np.float64)
+    W = np.asarray(l.W, dtype=np.float64)
+    T = np.einsum("ria,rbj,rcd->iabjcd", U, V, W)
     return bool(np.all(np.abs(T - expect) <= atol))
 
 
@@ -143,7 +197,15 @@ def apply_reference(l: LCMA, A: np.ndarray, B: np.ndarray) -> np.ndarray:
     """
     M, K = A.shape
     K2, N = B.shape
-    assert K == K2 and M % l.m == 0 and K % l.k == 0 and N % l.n == 0
+    if K != K2:
+        raise ValueError(f"apply_reference({l.name}): A {A.shape} and "
+                         f"B {B.shape} disagree on the contraction dimension")
+    if M % l.m or K % l.k or N % l.n:
+        # a bare assert here vanished under ``python -O``, letting misaligned
+        # operands reshape into garbage instead of raising
+        raise ValueError(
+            f"apply_reference({l.name}): shape (M={M}, K={K}, N={N}) is not "
+            f"divisible by the scheme grid <{l.m},{l.k},{l.n}> — pad first")
     Ms, Ks, Ns = M // l.m, K // l.k, N // l.n
     # Partition into submatrices.
     Ap = A.reshape(l.m, Ms, l.k, Ks).transpose(0, 2, 1, 3)  # (m,k,Ms,Ks)

@@ -92,7 +92,8 @@ def plan_key(M: int, K: int, N: int, hw: HardwareProfile, dtype: str, *,
              mode: str = "auto", candidates: tuple[str, ...] | None = None,
              max_grid: int = 5, min_speedup: float = 1.0,
              batch: int = 1, shared_b: bool = False,
-             layout: str | None = None, n_devices: int = 1) -> str:
+             layout: str | None = None, n_devices: int = 1,
+             accuracy_budget: float | None = None) -> str:
     """Cache key for one Decision-Module invocation (local, per-device shape).
 
     ``batch > 1`` keys a *grouped* decision (``plan_batched``): the whole
@@ -106,6 +107,11 @@ def plan_key(M: int, K: int, N: int, hw: HardwareProfile, dtype: str, *,
     candidate-layout set, the device count and the collective bandwidth the
     collective term was priced against (so re-probing ``--collectives``
     invalidates stale sharded plans without touching local ones).
+
+    ``accuracy_budget`` appends an ``ab=`` token only when a budget is set:
+    a budget narrows the candidate set statically (stability-pass filter), so
+    a budgeted plan must not alias the unbudgeted one — while budget-free
+    keys keep the historical format and existing persisted caches stay valid.
     """
     cands = ",".join(candidates) if candidates is not None else f"grid<={max_grid}"
     shape = f"{M}x{K}x{N}" if batch == 1 else \
@@ -115,6 +121,8 @@ def plan_key(M: int, K: int, N: int, hw: HardwareProfile, dtype: str, *,
         f"mode={mode}", f"fused={int(fused)}", f"pre={int(precombined_b)}",
         f"ms={min_speedup:g}", cands,
     ]
+    if accuracy_budget is not None:
+        parts.append(f"ab={accuracy_budget:g}")
     if layout is not None:
         parts.append(f"ly={layout}xD{int(n_devices)}@cb={hw.coll_bw():g}")
     return "|".join(parts)
@@ -162,6 +170,11 @@ def _encode(d: dec.Decision) -> dict:
         "algo": d.algo.name if d.algo is not None else None,
         "gemm_seconds": d.gemm_seconds, "lcma_seconds": d.lcma_seconds,
     }
+    if d.algo is not None:
+        # Content hash of the scheme definition: load-time and falcon-check's
+        # cache-audit pass both prove the cached decision still refers to the
+        # coefficients it priced (a renamed/edited scheme drops the entry).
+        out["algo_fp"] = d.algo.fingerprint
     if isinstance(d, dec.GroupedDecision):
         out["B"] = d.B
         out["shared_b"] = d.shared_b
@@ -177,6 +190,11 @@ def _decode(payload: dict) -> dec.Decision | None:
     try:
         algo = payload.get("algo")
         l = algorithms.get(algo) if algo is not None else None
+        fp = payload.get("algo_fp")
+        if l is not None and fp is not None and fp != l.fingerprint:
+            # The scheme registered under this name today is NOT the
+            # definition the cached decision priced — stale entry, drop it.
+            return None
         kw = dict(
             M=int(payload["M"]), N=int(payload["N"]), K=int(payload["K"]),
             dtype=str(payload["dtype"]), algo=l,

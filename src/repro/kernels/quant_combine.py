@@ -136,6 +136,15 @@ def fused_gemm_combine_h_quant(aq, a_scales, bq, b_scales, w: np.ndarray, *,
     _, _, Z = bq.shape
     Yb = a_scales.shape[2]
     by = Y // Yb
+    # Static overflow guard (falcon-check's stability pass): the kernel sums
+    # `by` int8*int8 products into an int32 lane before dequantizing, so the
+    # K-block depth must keep the worst-case |sum| = by * 127^2 inside int32.
+    from repro.analysis.stability import max_safe_accum_depth
+    if by > max_safe_accum_depth(32):
+        raise ValueError(
+            f"fused_gemm_combine_h_quant: K-block depth {by} overflows the "
+            f"int32 accumulator (worst |sum| = {by} * 127^2); max safe depth "
+            f"is {max_safe_accum_depth(32)} — use a smaller scale block")
     bx, bz = (block[0], block[1]) if block else (min(128, X), min(128, Z))
     assert X % bx == 0 and Z % bz == 0 and Y % by == 0
     grid = (X // bx, Z // bz, Yb)

@@ -26,6 +26,11 @@ def _align_candidates(dim: int, mxu: int = MXU) -> list[int]:
     return cands
 
 
+def _all_divisors(dim: int) -> list[int]:
+    """Every block size that tiles ``dim`` exactly, largest first (<= 512)."""
+    return [d for d in range(min(dim, 512), 0, -1) if dim % d == 0]
+
+
 def combine_vmem(bx: int, by: int, R: int, nparts: int, itemsize: int) -> int:
     # double-buffered: nparts input blocks + R output blocks
     return 2 * (nparts + R) * bx * by * itemsize
@@ -42,18 +47,36 @@ def plan_combine_blocks(X: int, Y: int, R: int, nparts: int, dtype,
                 if best is None or bx * by > best[0] * best[1]:
                     best = cand
     if best is None:
-        best = (_align_candidates(X)[-1], _align_candidates(Y)[-1])
+        # No MXU-preferred tile fits (high-R schemes, tight budgets): degrade
+        # through the full divisor lattice for the largest fitting pair.
+        for bx in _all_divisors(X):
+            for by in _all_divisors(Y):
+                if combine_vmem(bx, by, R, nparts, it) <= budget and \
+                        (best is None or bx * by > best[0] * best[1]):
+                    best = (bx, by)
+    if best is None:
+        best = (_all_divisors(X)[-1], _all_divisors(Y)[-1])
     return best
 
 
 def block_plans(l, M: int, K: int, N: int, dtype="float32",
-                budget: int = VMEM_BUDGET) -> dict:
+                budget: int = VMEM_BUDGET, hw=None) -> dict:
     """Full block-plan summary for one LCMA application on a padded problem.
 
     The export surface for the autotuner (``core.autotune``) and the tune CLI:
     everything the Pallas pipeline would pick for this shape, as plain data
     that can be embedded in a calibrated-profile JSON and inspected offline.
+
+    ``hw`` (a ``HardwareProfile``) clamps the budget to the profile's
+    per-core VMEM when that is tighter than ``budget`` — so plans exported
+    for a specific part never claim more on-chip memory than it has, and
+    falcon-check's plan lint can flag a default-budget plan against a
+    smaller device.
     """
+    if hw is not None:
+        hw_vmem = getattr(hw, "vmem_bytes", None)
+        if hw_vmem:
+            budget = min(budget, int(hw_vmem))
     it = jnp.dtype(dtype).itemsize
     Mp = ((M + l.m - 1) // l.m) * l.m
     Kp = ((K + l.k - 1) // l.k) * l.k
@@ -100,5 +123,17 @@ def plan_fused_gemm_blocks(X: int, Z: int, Y: int, R: int, m: int, n: int, dtype
                 if score > best_score:
                     best, best_score = (bx, bz, by), score
     if best is None:
-        best = (_align_candidates(X)[-1], _align_candidates(Z)[-1], _align_candidates(Y)[-1])
+        # No MXU-preferred tile fits (the (R, bx, bz) accumulator of a
+        # high-R scheme claims the budget first): degrade through the full
+        # divisor lattice instead of emitting an over-budget plan.
+        for bx in _all_divisors(X):
+            for bz in _all_divisors(Z):
+                for by in _all_divisors(Y):
+                    if fused_gemm_vmem(bx, bz, by, R, m, n, it) > budget:
+                        continue
+                    score = bx * bz * min(by, 512)
+                    if score > best_score:
+                        best, best_score = (bx, bz, by), score
+    if best is None:
+        best = (_all_divisors(X)[-1], _all_divisors(Z)[-1], _all_divisors(Y)[-1])
     return best

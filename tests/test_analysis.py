@@ -1,0 +1,394 @@
+"""falcon-check static-analysis subsystem: pass APIs + CLI acceptance.
+
+Every scenario here is static — no kernel is compiled or launched. The four
+acceptance scenarios (corrupted scheme, undersized accumulator, over-VMEM
+plan, dangling cache ref) each drive the CLI end-to-end and assert both the
+non-zero exit AND that the report names the responsible pass.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import analysis
+from repro.core import algorithms as alg
+from repro.core import decision as dec
+from repro.core import discovery, hardware, plan_cache
+from repro.core.lcma import LCMA, apply_reference, validate
+from repro.kernels import tuning
+from repro.tools import check as check_cli
+
+from _schemes import mag2_111, mag2_scheme
+
+
+# ---------------------------------------------------------------------------
+# pass 1: exact Brent verification
+# ---------------------------------------------------------------------------
+
+def _corrupt(l: LCMA, name="corrupt") -> LCMA:
+    W = l.W.copy()
+    W[0, 0, 0] += 1
+    return LCMA(name, l.m, l.k, l.n, l.R, l.U, l.V, W)
+
+
+def test_brent_clean_on_library():
+    findings = analysis.check_library()
+    assert not analysis.has_errors(findings)
+
+
+def test_brent_flags_corrupted_scheme():
+    findings = analysis.check_scheme(_corrupt(alg.strassen()))
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.pass_name == "brent" and f.is_error
+    assert "Brent equations violated" in f.message
+
+
+def test_brent_residual_is_exact_integer():
+    res = analysis.brent_residual(alg.strassen())
+    assert res.dtype == np.int64
+    assert not res.any()
+    bad = analysis.brent_residual(_corrupt(alg.strassen()))
+    assert bad.any()
+
+
+def test_verify_or_raise_names_context():
+    with pytest.raises(ValueError, match="promotion"):
+        analysis.verify_or_raise(_corrupt(alg.strassen()), context="promotion")
+
+
+def test_register_rejects_invalid_scheme():
+    bad = _corrupt(alg.strassen(), name="bad-register")
+    with pytest.raises(ValueError, match="Brent"):
+        alg.register(bad)
+    assert "bad-register" not in alg.library()
+
+
+def test_validate_exact_integer_path_is_default():
+    assert validate(alg.strassen())
+    assert not validate(_corrupt(alg.strassen()))
+    # float path survives for prospective non-integer decompositions
+    assert validate(alg.strassen(), atol=1e-9)
+
+
+def test_discovery_output_is_exactly_verified():
+    found = discovery.discover(2, 2, 2, 7, restarts=8, als_iters=40, seed=0,
+                               init=alg.strassen())
+    assert found is not None
+    assert not analysis.check_scheme(found)
+
+
+# ---------------------------------------------------------------------------
+# pass 2: stability analysis + Decision Module budget
+# ---------------------------------------------------------------------------
+
+def test_stability_standard_growth_is_k():
+    s = alg.standard(2, 3, 2).stability
+    # standard <m,k,n>: alpha_u = alpha_v = 1 per term, alpha_w = k
+    assert s.growth == 3
+    assert s.max_abs_coeff == 1
+
+
+def test_stability_orders_strassen_below_mag2():
+    st = alg.strassen().stability
+    m2 = mag2_scheme().stability
+    assert st.error_bound("bfloat16") < m2.error_bound("bfloat16")
+    assert m2.max_abs_coeff > 1
+
+
+def test_stability_warns_on_magnitude_regression_scheme():
+    findings = analysis.check_scheme_stability(mag2_111())
+    warn = [f for f in findings if f.severity == "warning"]
+    assert warn and "magnitude" in warn[0].message
+
+
+def test_decide_respects_accuracy_budget():
+    hw = hardware.TPU_V5E
+    strassen = alg.strassen()
+    budget = strassen.stability.error_bound("bfloat16")  # admits strassen only
+    cands = [strassen, mag2_scheme()]
+    d = dec.decide(4096, 4096, 4096, hw, "bfloat16", candidates=cands,
+                   accuracy_budget=budget)
+    assert all(e.lcma.name != "mag2-222" for e in d.estimates)
+    # a budget below every candidate's bound forces standard GEMM
+    d0 = dec.decide(4096, 4096, 4096, hw, "bfloat16", candidates=cands,
+                    accuracy_budget=budget / 1e6)
+    assert d0.algo is None and d0.estimates == ()
+
+
+def test_plan_key_accuracy_budget_token():
+    hw = hardware.TPU_V5E
+    k0 = plan_cache.plan_key(64, 64, 64, hw, "bfloat16")
+    kb = plan_cache.plan_key(64, 64, 64, hw, "bfloat16", accuracy_budget=0.25)
+    assert k0 != kb and "ab=0.25" in kb and "ab=" not in k0
+
+
+def test_quant_accumulator_bounds():
+    assert analysis.max_safe_accum_depth(32) == (2**31 - 1) // 127**2
+    ok = analysis.check_quant_accumulator(128, 32)
+    assert not analysis.has_errors(ok)
+    bad = analysis.check_quant_accumulator(128, 16)
+    assert analysis.has_errors(bad)
+    assert bad[0].pass_name == "stability"
+
+
+def test_quant_kernel_guards_accumulator_depth():
+    from repro.kernels import quant_combine
+    depth = analysis.max_safe_accum_depth(32) + 1
+    R = 2
+    aq = np.zeros((R, 1, depth), np.int8)
+    a_scales = np.ones((R, 1, 1), np.float32)
+    bq = np.zeros((R, depth, 1), np.int8)
+    b_scales = np.ones((R, 1, 1), np.float32)
+    w = np.ones((R, 1, 1), np.int8)
+    with pytest.raises(ValueError, match="overflow"):
+        quant_combine.fused_gemm_combine_h_quant(
+            aq, a_scales, bq, b_scales, w, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# pass 3: plan + codegen lint
+# ---------------------------------------------------------------------------
+
+def _tiny_vmem(name="tiny_vmem_test") -> hardware.HardwareProfile:
+    return hardware.register_profile(dataclasses.replace(
+        hardware.TPU_V5E, name=name, vmem_bytes=1 << 10))
+
+
+def test_plan_lint_clean_on_default_profile():
+    findings = analysis.lint_scheme_plans(
+        alg.strassen(), [(1024, 1024, 1024)], hardware.TPU_V5E)
+    assert not analysis.has_errors(findings)
+
+
+def test_plan_lint_flags_overbudget_plan():
+    plan = tuning.block_plans(alg.strassen(), 1024, 1024, 1024)
+    findings = analysis.lint_block_plan(plan, _tiny_vmem())
+    errs = [f for f in findings if f.is_error]
+    assert errs and all(f.pass_name == "plan-lint" for f in errs)
+    assert any("VMEM footprint" in f.message for f in errs)
+
+
+def test_plan_lint_flags_tampered_report():
+    plan = tuning.block_plans(alg.strassen(), 1024, 1024, 1024)
+    plan["fused_gemm_vmem_bytes"] += 1
+    findings = analysis.lint_block_plan(plan, hardware.TPU_V5E)
+    assert any("stale or hand-edited" in f.message for f in findings
+               if f.is_error)
+
+
+def test_plan_lint_flags_illegal_dtype():
+    plan = tuning.block_plans(alg.strassen(), 1024, 1024, 1024,
+                              dtype="float64")
+    findings = analysis.lint_block_plan(plan, hardware.TPU_V5E,
+                                        dtype="float64", backend="pallas")
+    assert any("not executable on backend" in f.message for f in findings
+               if f.is_error)
+
+
+def test_planner_degrades_high_rank_schemes_into_budget():
+    # <4,4,4>;49: the (R, bx, bz) accumulator bursts the MXU-aligned tiles;
+    # the planner must degrade block sizes, not emit an over-budget plan.
+    l = alg.get("s444")
+    plan = tuning.block_plans(l, 1024, 1024, 1024, hw=hardware.TPU_V5E)
+    assert not analysis.has_errors(
+        analysis.lint_block_plan(plan, hardware.TPU_V5E))
+
+
+def test_block_plans_hw_clamps_budget():
+    hw = dataclasses.replace(hardware.TPU_V5E, name="clamp", vmem_bytes=1 << 20)
+    plan = tuning.block_plans(alg.strassen(), 1024, 1024, 1024, hw=hw)
+    assert plan["vmem_budget_bytes"] == 1 << 20
+    assert not analysis.has_errors(analysis.lint_block_plan(plan, hw))
+
+
+def test_codegen_lint_clean_on_candidates():
+    for l in alg.candidates():
+        assert analysis.lint_codegen(l) == [], l.name
+
+
+def test_codegen_lint_clean_on_magnitude_scheme():
+    # the PR 4 regression class: |c|>1 coefficients must round-trip the AST
+    assert analysis.lint_codegen(mag2_scheme()) == []
+
+
+def test_codegen_lint_catches_magnitude_drop(monkeypatch):
+    """The PR 4 class of generator bug: emitted source drops |c|>1 magnitudes.
+
+    Simulated by emitting source for a magnitude-stripped clone of mag2-111
+    while linting the real scheme — the lint must notice the emitted
+    coefficient maps disagree with the true tensors.
+    """
+    from repro.core import codegen
+
+    l = mag2_111()
+    stripped = LCMA("mag2-dropped", 1, 1, 1, 2,
+                    np.sign(l.U), np.sign(l.V), np.sign(l.W))
+    orig = codegen._emit_source
+    monkeypatch.setattr(codegen, "_emit_source",
+                        lambda scheme, o: orig(stripped, o))
+    findings = analysis.lint_codegen(l)
+    errs = [f for f in findings if f.is_error]
+    assert errs and all(f.pass_name == "codegen-lint" for f in errs)
+
+
+# ---------------------------------------------------------------------------
+# pass 4: cache audit
+# ---------------------------------------------------------------------------
+
+def _saved_cache(tmp_path, hw=hardware.TPU_V5E):
+    cache = plan_cache.PlanCache(capacity=8)
+    d = dec.decide(1024, 1024, 1024, hw, "bfloat16")
+    cache.insert(plan_cache.plan_key(1024, 1024, 1024, hw, "bfloat16"), d)
+    return cache.save(str(tmp_path / "cache.json"))
+
+
+def test_cache_audit_clean_roundtrip(tmp_path):
+    path = _saved_cache(tmp_path)
+    findings = analysis.audit_cache_file(path, hw=hardware.TPU_V5E)
+    assert not analysis.has_errors(findings)
+
+
+def test_cache_audit_flags_dangling_scheme(tmp_path):
+    path = _saved_cache(tmp_path)
+    doc = json.loads(open(path).read())
+    doc["entries"][0][1]["algo"] = "ghost-scheme"
+    doc["entries"][0][1]["algo_fp"] = "0" * 12
+    doc["entries"][0][1]["lcma_seconds"] = 1e-5
+    json.dump(doc, open(path, "w"))
+    findings = analysis.audit_cache_file(path)
+    errs = [f for f in findings if f.is_error]
+    assert errs and all(f.pass_name == "cache-audit" for f in errs)
+    assert any("ghost-scheme" in f.message for f in errs)
+
+
+def test_cache_audit_flags_definition_drift(tmp_path):
+    path = _saved_cache(tmp_path)
+    doc = json.loads(open(path).read())
+    entry = doc["entries"][0][1]
+    if entry["algo"] is None:   # force an LCMA-bearing entry
+        entry["algo"] = "strassen"
+        entry["lcma_seconds"] = 1e-5
+    entry["algo_fp"] = "f" * 12  # not any real fingerprint
+    json.dump(doc, open(path, "w"))
+    findings = analysis.audit_cache_file(path)
+    assert any("definition changed" in f.message for f in findings
+               if f.is_error)
+
+
+def test_cache_load_drops_fingerprint_drift(tmp_path):
+    path = _saved_cache(tmp_path)
+    doc = json.loads(open(path).read())
+    entry = doc["entries"][0][1]
+    entry["algo"] = "strassen"
+    entry["lcma_seconds"] = 1e-5
+    entry["algo_fp"] = "f" * 12
+    json.dump(doc, open(path, "w"))
+    cache = plan_cache.PlanCache(path=path)   # permissive loader
+    assert len(cache) == 0                    # stale entry dropped, not served
+
+
+def test_cache_audit_flags_shape_mismatch(tmp_path):
+    path = _saved_cache(tmp_path)
+    doc = json.loads(open(path).read())
+    doc["entries"][0][1]["M"] = 999
+    json.dump(doc, open(path, "w"))
+    findings = analysis.audit_cache_file(path)
+    assert any("shape token" in f.message for f in findings if f.is_error)
+
+
+def test_fingerprint_tracks_definition_not_name():
+    a = alg.strassen()
+    b = LCMA("renamed", a.m, a.k, a.n, a.R, a.U, a.V, a.W)
+    assert a.fingerprint == b.fingerprint
+    assert a.fingerprint != _corrupt(a).fingerprint
+
+
+# ---------------------------------------------------------------------------
+# satellite: ValueErrors with shapes instead of bare asserts
+# ---------------------------------------------------------------------------
+
+def test_concat_mismatch_raises_with_shapes():
+    with pytest.raises(ValueError, match=r"<2,2,2>.*<3,3,3>"):
+        alg.concat_n(alg.strassen(), alg.laderman())
+    with pytest.raises(ValueError, match="concat_m"):
+        alg.concat_m(alg.strassen(), alg.laderman())
+    with pytest.raises(ValueError, match="concat_k"):
+        alg.concat_k(alg.strassen(), alg.laderman())
+
+
+def test_apply_reference_raises_with_shapes():
+    l = alg.strassen()
+    with pytest.raises(ValueError, match="contraction"):
+        apply_reference(l, np.ones((4, 4)), np.ones((6, 4)))
+    with pytest.raises(ValueError, match="divisible"):
+        apply_reference(l, np.ones((3, 4)), np.ones((4, 4)))
+
+
+# ---------------------------------------------------------------------------
+# CLI acceptance scenarios
+# ---------------------------------------------------------------------------
+
+def test_cli_all_clean_on_shipped_library(capsys):
+    assert check_cli.main(["--all"]) == 0
+    out = capsys.readouterr().out
+    assert "0 error(s)" in out
+
+
+def test_cli_flags_corrupted_strassen(tmp_path, capsys):
+    l = _corrupt(alg.strassen(), name="strassen-corrupt")
+    doc = dict(name=l.name, m=l.m, k=l.k, n=l.n, R=l.R,
+               U=l.U.tolist(), V=l.V.tolist(), W=l.W.tolist())
+    p = tmp_path / "bad_scheme.json"
+    p.write_text(json.dumps(doc))
+    assert check_cli.main(["--scheme-file", str(p)]) == 1
+    out = capsys.readouterr().out
+    assert "brent" in out and "Brent equations violated" in out
+
+
+def test_cli_flags_undersized_accumulator(capsys):
+    assert check_cli.main(["--quant-accum", "128,16"]) == 1
+    out = capsys.readouterr().out
+    assert "stability" in out and "overflow" in out
+
+
+def test_cli_flags_overbudget_plan(tmp_path, capsys):
+    _tiny_vmem("tiny_vmem_cli")
+    plan = tuning.block_plans(alg.strassen(), 1024, 1024, 1024)
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps(plan))
+    assert check_cli.main(["--plan-file", str(p),
+                           "--hardware", "tiny_vmem_cli"]) == 1
+    out = capsys.readouterr().out
+    assert "plan-lint" in out and "VMEM footprint" in out
+
+
+def test_cli_flags_dangling_cache_entry(tmp_path, capsys):
+    path = _saved_cache(tmp_path)
+    doc = json.loads(open(path).read())
+    doc["entries"][0][1]["algo"] = "ghost-scheme"
+    doc["entries"][0][1]["lcma_seconds"] = 1e-5
+    json.dump(doc, open(path, "w"))
+    assert check_cli.main(["--cache", path]) == 1
+    out = capsys.readouterr().out
+    assert "cache-audit" in out and "ghost-scheme" in out
+
+
+def test_cli_budget_makes_mag2_an_error(tmp_path, capsys):
+    l = mag2_scheme()
+    doc = dict(name=l.name, m=l.m, k=l.k, n=l.n, R=l.R,
+               U=l.U.tolist(), V=l.V.tolist(), W=l.W.tolist())
+    p = tmp_path / "mag2.json"
+    p.write_text(json.dumps(doc))
+    # strassen's bf16 bound as budget: mag2 exceeds it
+    budget = alg.strassen().stability.error_bound("bfloat16")
+    assert check_cli.main(["--scheme-file", str(p),
+                           "--budget", f"{budget:g}"]) == 1
+    out = capsys.readouterr().out
+    assert "stability" in out and "exceeds the accuracy budget" in out
+
+
+def test_cli_single_scheme_pass(capsys):
+    assert check_cli.main(["--scheme", "strassen"]) == 0
+    assert check_cli.main(["--scheme", "no-such-scheme"]) == 2

@@ -1,0 +1,107 @@
+"""Property tests for the falcon-check analysis passes (tests/_propcheck.py).
+
+Three families:
+
+  * composition operators preserve exact Brent validity — any pairing of
+    library schemes through ``tensor_product``/``concat_*``/``cyclic``/
+    ``transpose_dual`` must verify with zero residual;
+  * the int8 accumulator bound is an actual bound: no randomized int8
+    contraction of a given depth exceeds ``int8_accum_bound(depth)``, and
+    every depth admitted by ``max_safe_accum_depth(32)`` stays inside int32;
+  * the stability regression: the |c|>1 family from ``tests/_schemes.py``
+    carries a strictly larger error bound than same-grid ternary Strassen,
+    and falcon-check's stability pass flags it.
+"""
+import numpy as np
+
+from repro import analysis
+from repro.core import algorithms as alg
+
+from _propcheck import given, settings, st
+from _schemes import mag2_111, mag2_scheme
+
+_BASE = ("strassen", "strassen-winograd", "laderman", "s223")
+_UNARY = ("cyclic", "transpose_dual")
+
+
+@settings(max_examples=16, deadline=None)
+@given(st.sampled_from(_BASE), st.sampled_from(_BASE),
+       st.sampled_from(("tensor_product", "concat_n", "concat_m", "concat_k")))
+def test_composition_preserves_brent_validity(n1, n2, op):
+    l1, l2 = alg.get(n1), alg.get(n2)
+    fn = getattr(alg, op)
+    if op != "tensor_product":
+        # concat ops require matching grids on the non-concatenated dims
+        if (l1.m, l1.k, l1.n) != (l2.m, l2.k, l2.n):
+            return
+    out = fn(l1, l2, f"prop-{op}-{n1}-{n2}")
+    assert analysis.check_scheme(out) == []
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(_BASE), st.sampled_from(_UNARY))
+def test_unary_composition_preserves_brent_validity(name, op):
+    out = getattr(alg, op)(alg.get(name))
+    assert analysis.check_scheme(out) == []
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=4096), st.integers(0, 2**31 - 1))
+def test_int8_accum_bound_never_violated(depth, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-127, 128, size=depth, dtype=np.int64)
+    b = rng.integers(-127, 128, size=depth, dtype=np.int64)
+    assert abs(int(a @ b)) <= analysis.int8_accum_bound(depth)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=(2**31 - 1) // 127**2))
+def test_safe_depth_fits_int32(depth):
+    assert depth <= analysis.max_safe_accum_depth(32)
+    assert analysis.int8_accum_bound(depth) <= 2**31 - 1
+    assert not analysis.has_errors(analysis.check_quant_accumulator(depth, 32))
+
+
+def test_unsafe_depth_overflows_int32():
+    depth = analysis.max_safe_accum_depth(32) + 1
+    assert analysis.int8_accum_bound(depth) > 2**31 - 1
+    assert analysis.has_errors(analysis.check_quant_accumulator(depth, 32))
+    # the bound is attainable: all-(-127) against all-127 meets it exactly
+    a = np.full(4, 127, np.int64)
+    assert int(a @ a) == analysis.int8_accum_bound(4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(("float32", "bfloat16", "float16")))
+def test_mag2_family_has_larger_bound_and_is_flagged(dtype):
+    """Regression: the |c|>1 family must carry a larger bound than Strassen
+    on the same grid, and the stability pass must flag it."""
+    m2 = mag2_scheme()
+    assert m2.grid == alg.strassen().grid
+    assert m2.stability.error_bound(dtype) > \
+        alg.strassen().stability.error_bound(dtype)
+    findings = analysis.check_scheme_stability(m2, dtype=dtype)
+    assert any(f.severity == "warning" and "magnitude" in f.message
+               for f in findings)
+    # and with Strassen's own bound as the budget, it becomes an error
+    budget = alg.strassen().stability.error_bound(dtype)
+    findings = analysis.check_scheme_stability(m2, budget=budget, dtype=dtype)
+    assert analysis.has_errors(findings)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_stability_bound_dominates_reference_error(seed):
+    """The Higham bound is conservative: measured float32 error of the |c|>1
+    scheme against an exact float64 product stays under error_bound."""
+    from repro.core.lcma import apply_reference
+
+    l = mag2_111()
+    rng = np.random.default_rng(seed)
+    A = rng.uniform(-1, 1, (8, 8))
+    B = rng.uniform(-1, 1, (8, 8))
+    exact = A @ B
+    got = apply_reference(l, A.astype(np.float32), B.astype(np.float32))
+    scale = np.abs(A).max() * np.abs(B).max() * A.shape[1]
+    rel = np.max(np.abs(got.astype(np.float64) - exact)) / scale
+    assert rel <= l.stability.error_bound("float32")

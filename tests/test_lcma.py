@@ -89,7 +89,7 @@ def test_register_validates_and_guards_names():
     s = alg.strassen()
     bad_w = s.W.copy()
     bad_w[0, 0, 0] += 1
-    with pytest.raises(ValueError, match="tensor identity"):
+    with pytest.raises(ValueError, match="Brent equations violated"):
         alg.register(LCMA("bad-reg", 2, 2, 2, 7, s.U, s.V, bad_w))
     assert "bad-reg" not in alg.library()
 
