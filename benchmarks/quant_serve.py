@@ -1,0 +1,175 @@
+"""int8-quantized serving tier vs fp32: throughput, engagement, logit error.
+
+Serves the same ragged request set through two ServeEngines built from the
+same seed — fp32 and ``quantize=True`` — on a widened granite smoke config
+(d_model 256: large enough that the Decision Module actually selects the
+quantized LCMA tier for the serving buckets) and reports:
+
+* raw int8 vs fp32 GEMM GFLOPS on a probe shape (what the decision tier's
+  ``FLOPS_int8`` pricing is about);
+* engine tokens/s for both tiers;
+* quant-tier engagement: the fraction of precombined PlannedWeights that
+  carry offline-quantized B̃q + scales;
+* max *prefix-matched* relative logit error — step ``t`` of a request is
+  comparable only while both engines generated identical tokens up to ``t``
+  (greedy decode diverging on a near-tie changes every downstream context).
+
+``--check`` is the CI gate: exits non-zero when the error exceeds
+``REL_BUDGET`` or either engine fails to serve every request.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import plan_cache
+from repro.core.engine import PlannedWeight
+from repro.serve import ServeEngine, StepLoop
+
+# Relative logit-error ceiling for blockwise int8 weights at these dims
+# (mirrors tests/test_quant_serve.py; measured headroom is ~3x).
+REL_BUDGET = 0.15
+
+
+def _widened_cfg():
+    return dataclasses.replace(
+        registry.smoke_config("granite_3_2b"),
+        d_model=256, d_ff=512, vocab_size=512, num_heads=4, num_kv_heads=4)
+
+
+def _gemm_gflops(dtype, M=512, K=512, N=512, reps=3):
+    a = jnp.ones((M, K), dtype)
+    b = jnp.ones((K, N), dtype)
+    acc = jnp.int32 if dtype == jnp.int8 else jnp.float32
+    f = jax.jit(lambda x, y: jax.lax.dot_general(
+        x, y, (((1,), (0,)), ((), ())), preferred_element_type=acc))
+    jax.block_until_ready(f(a, b))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(a, b))
+    return 2.0 * M * N * K * reps / (time.perf_counter() - t0) / 1e9
+
+
+def _serve(cfg, *, quantize, requests, max_slots, max_prompt_len,
+           max_new_tokens, seed):
+    plan_cache.reset()
+    engine = ServeEngine(cfg, max_slots=max_slots,
+                         max_prompt_len=max_prompt_len,
+                         max_new_tokens=max_new_tokens,
+                         record_logits=True, seed=seed, quantize=quantize)
+    rng = np.random.default_rng(seed + 11)
+    for _ in range(requests):
+        plen = int(rng.integers(4, max_prompt_len + 1))
+        engine.submit(rng.integers(0, cfg.vocab_size, plen),
+                      max_new_tokens=int(rng.integers(2, max_new_tokens + 1)))
+    done = StepLoop(engine).run_until_idle()
+    return engine, sorted(done, key=lambda r: r.rid)
+
+
+def _quantized_weights(engine) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        engine.params, is_leaf=lambda x: isinstance(x, PlannedWeight))
+    return sum(1 for x in leaves
+               if isinstance(x, PlannedWeight) and x.quantized)
+
+
+def _max_rel_logit_err(fp_done, q_done) -> tuple[float, int]:
+    """Max prefix-matched |logit_q - logit_fp| / max|logit_fp|, #steps."""
+    worst, compared = 0.0, 0
+    for rf, rq in zip(fp_done, q_done):
+        scale = max(float(np.max(np.abs(np.asarray(l)))) for l in rf.logits)
+        for t, (lf, lq) in enumerate(zip(rf.logits, rq.logits)):
+            if rf.generated[:t] != rq.generated[:t]:
+                break
+            err = float(np.max(np.abs(np.asarray(lf) - np.asarray(lq))))
+            worst = max(worst, err / max(scale, 1e-30))
+            compared += 1
+    return worst, compared
+
+
+def run(requests=12, max_slots=4, max_prompt_len=32, max_new_tokens=8,
+        seed=0, verbose=True) -> list[dict]:
+    cfg = _widened_cfg()
+    fp_gflops = _gemm_gflops(jnp.float32)
+    i8_gflops = _gemm_gflops(jnp.int8)
+
+    kw = dict(requests=requests, max_slots=max_slots,
+              max_prompt_len=max_prompt_len, max_new_tokens=max_new_tokens,
+              seed=seed)
+    fp_engine, fp_done = _serve(cfg, quantize=False, **kw)
+    q_engine, q_done = _serve(cfg, quantize=True, **kw)
+
+    nq = _quantized_weights(q_engine)
+    n_pre = max(q_engine.n_precombined, 1)
+    err, compared = _max_rel_logit_err(fp_done, q_done)
+    row = {
+        "requests": requests,
+        "fp_finished": len(fp_done), "q_finished": len(q_done),
+        "fp32_gemm_gflops": fp_gflops, "int8_gemm_gflops": i8_gflops,
+        "fp_tokens_per_s": fp_engine.summary()["tokens_per_s"],
+        "q_tokens_per_s": q_engine.summary()["tokens_per_s"],
+        "quant_weights": nq, "precombined": q_engine.n_precombined,
+        "quant_weight_frac": nq / n_pre,
+        "max_rel_logit_err": err, "compared_steps": compared,
+        "rel_budget": REL_BUDGET,
+    }
+    if verbose:
+        print(f"raw GEMM 512^3: {fp_gflops:.1f} GF/s fp32 vs "
+              f"{i8_gflops:.1f} GF/s int8 "
+              f"({i8_gflops / max(fp_gflops, 1e-9):.2f}x)")
+        print(f"served {len(q_done)}/{requests} quant, "
+              f"{len(fp_done)}/{requests} fp32: "
+              f"{row['q_tokens_per_s']:.1f} vs {row['fp_tokens_per_s']:.1f} tok/s")
+        print(f"quant tier: {nq}/{q_engine.n_precombined} precombined "
+              f"weights carry int8 B̃q ({row['quant_weight_frac']:.0%})")
+        print(f"logit error: max {err:.4f} relative over {compared} "
+              f"prefix-matched steps (budget {REL_BUDGET})")
+    return [row]
+
+
+def check(row: dict) -> list[str]:
+    problems = []
+    if row["q_finished"] != row["requests"]:
+        problems.append(f"quant engine served {row['q_finished']}/"
+                        f"{row['requests']} requests")
+    if row["quant_weights"] < 1:
+        problems.append("quant tier never engaged: 0 quantized PlannedWeights")
+    if row["compared_steps"] < row["requests"]:
+        problems.append(f"only {row['compared_steps']} comparable steps for "
+                        f"{row['requests']} requests")
+    if row["max_rel_logit_err"] > REL_BUDGET:
+        problems.append(f"max relative logit error "
+                        f"{row['max_rel_logit_err']:.4f} > budget {REL_BUDGET}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="gate: non-zero exit when the quantized tier's "
+                         "logit error drifts past the budget")
+    ap.add_argument("--requests", type=int, default=12)
+    args = ap.parse_args(argv)
+    (row,) = run(requests=args.requests)
+    print(f"quant_serve,{row['requests']},{row['q_tokens_per_s']:.1f},"
+          f"{row['quant_weight_frac']:.3f},{row['max_rel_logit_err']:.4f}")
+    if args.check:
+        problems = check(row)
+        for p in problems:
+            print(f"QUANT GATE: {p}", file=sys.stderr)
+        if problems:
+            return 1
+        print(f"quant gate green: {row['compared_steps']} steps within "
+              f"{REL_BUDGET} relative logit-error budget")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

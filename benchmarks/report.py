@@ -145,6 +145,17 @@ def to_metrics(results: dict) -> dict:
         m["serve.padding_waste"] = _metric(r["padding_waste"], "frac",
                                            higher_is_better=False)
         m["serve.plan_cache_hit_rate"] = _metric(r["plan_cache_hit_rate"], "frac")
+    for r in results.get("quant_serve") or []:
+        m["quant_serve.int8_gemm_gflops"] = _metric(
+            r["int8_gemm_gflops"], "GFLOPS")
+        m["quant_serve.tokens_per_s_fp32"] = _metric(
+            r["fp_tokens_per_s"], "tok/s")
+        m["quant_serve.tokens_per_s_int8"] = _metric(
+            r["q_tokens_per_s"], "tok/s")
+        m["quant_serve.quant_weight_frac"] = _metric(
+            r["quant_weight_frac"], "frac")
+        m["quant_serve.max_rel_logit_err"] = _metric(
+            r["max_rel_logit_err"], "rel_err", higher_is_better=False)
     for r in results.get("train_bwd") or []:
         m[f"train_bwd.planned_bwd_gflops_n{r['n']}"] = _metric(
             r["planned_bwd_gflops"], "GFLOPS")

@@ -21,8 +21,8 @@ import traceback
 
 def _sections(quick: bool):
     from . import (distributed, e2e_llm, moe_grouped, operator_level,
-                   plan_cache, precision, roofline_fig8, serve_bench,
-                   stepwise, train_bwd)
+                   plan_cache, precision, quant_serve, roofline_fig8,
+                   serve_bench, stepwise, train_bwd)
 
     return [
         ("operator_level",
@@ -45,6 +45,11 @@ def _sections(quick: bool):
          "Continuous-batching serve engine (bucketed plan reuse)",
          lambda: serve_bench.run(requests=8 if quick else 16,
                                  max_prompt_len=16 if quick else 32,
+                                 max_new_tokens=4 if quick else 8)),
+        ("quant_serve",
+         "int8-quantized serving tier: tokens/s + prefix-matched logit "
+         "error vs fp32",
+         lambda: quant_serve.run(requests=6 if quick else 12,
                                  max_new_tokens=4 if quick else 8)),
         ("train_bwd",
          "Planned custom-VJP backward pass vs differentiate-through",

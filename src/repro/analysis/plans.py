@@ -25,8 +25,8 @@ from repro.core.lcma import LCMA
 from repro.core.hardware import HardwareProfile
 from .findings import ERROR, WARNING, Finding
 
-__all__ = ["lint_block_plan", "lint_scheme_plans", "lint_codegen",
-           "BACKEND_DTYPES", "MAX_GRID_PROGRAMS"]
+__all__ = ["lint_block_plan", "lint_scheme_plans", "lint_quant_plans",
+           "lint_codegen", "BACKEND_DTYPES", "MAX_GRID_PROGRAMS"]
 
 PASS = "plan-lint"
 CODEGEN_PASS = "codegen-lint"
@@ -170,6 +170,94 @@ def lint_scheme_plans(l: LCMA, shapes, hw: HardwareProfile, *,
         findings.extend(lint_block_plan(
             plan, hw, dtype=dtype, backend=backend,
             subject=f"{l.name}@{M}x{K}x{N}/{dtype}"))
+    return findings
+
+
+def _snap_block(dim: int, cap: int = 128) -> int:
+    """Largest divisor of ``dim`` that is <= ``cap`` (the kernels' snap rule)."""
+    return next(d for d in range(min(cap, dim), 0, -1) if dim % d == 0)
+
+
+def lint_quant_plans(l: LCMA, shapes, hw: HardwareProfile, *,
+                     backend: str = "pallas",
+                     acc_bits: int = 32) -> list[Finding]:
+    """Statically lint the int8-quantized pipeline ``l`` would run on ``shapes``.
+
+    Re-derives, for each serving shape, exactly the choices the quantized
+    PlannedWeight path makes — the weight scale-block ``by`` (largest divisor
+    of the combined K that is <= 128, per ``engine._quantize_weight``) and the
+    fused kernel's divisor-snapped ``(bx, bz)`` — then checks the claims those
+    kernels assert at trace time, without compiling anything:
+
+    * **backend legality** — int8 operands must be executable on ``backend``
+      (``shard_map_local`` has no quant path);
+    * **accumulator safety** — a ``by``-deep int8*int8 reduction must fit the
+      int-``acc_bits`` accumulator (``stability.max_safe_accum_depth``);
+    * **scale-block / grid divisibility** — ``by | K/k``, ``bx | M/m``,
+      ``bz | N/n``: the asserts ``fused_gemm_combine_h_quant`` and
+      ``quantize_b_blockwise`` make on every launch;
+    * **grid bounds** — the quant GEMM grid stays below the int32 program
+      index wrap-around;
+    * **degenerate scale blocks** (warning) — a ``by`` far below the 128 cap
+      means the shape's combined K is oddly factored and the per-block scale
+      arrays bloat the memory traffic the decision tier priced.
+    """
+    from repro.analysis.stability import int8_accum_bound, max_safe_accum_depth
+
+    findings: list[Finding] = []
+    allowed = BACKEND_DTYPES.get(backend)
+    safe_depth = max_safe_accum_depth(acc_bits)
+
+    for (M, K, N) in shapes:
+        subject = f"{l.name}@{M}x{K}x{N}/int8"
+
+        if allowed is None:
+            findings.append(Finding(
+                PASS, WARNING, subject,
+                f"unknown backend {backend!r}: int8 legality not checked"))
+        elif "int8" not in allowed:
+            findings.append(Finding(
+                PASS, ERROR, subject,
+                f"int8 is not executable on backend {backend!r} "
+                f"(legal: {sorted(allowed)}); the quantized tier must not "
+                f"be selected here"))
+            continue
+
+        Mp = M + (-M) % l.m
+        Kp = K + (-K) % l.k
+        Np = N + (-N) % l.n
+        X, Ks, Z = Mp // l.m, Kp // l.k, Np // l.n
+        by = _snap_block(Ks)
+        bx = _snap_block(X)
+        bz = _snap_block(Z)
+
+        ok = True
+        ok &= _check_div(findings, subject, "quant scale block over K/k", Ks, by)
+        ok &= _check_div(findings, subject, "quant fused_gemm.x over M/m", X, bx)
+        ok &= _check_div(findings, subject, "quant fused_gemm.z over N/n", Z, bz)
+        if not ok:
+            continue
+
+        if by > safe_depth:
+            findings.append(Finding(
+                PASS, ERROR, subject,
+                f"int8 reduction depth {by} can overflow the int{acc_bits} "
+                f"accumulator: worst-case |sum| = {int8_accum_bound(by)} > "
+                f"{2 ** (acc_bits - 1) - 1} (max safe depth {safe_depth})"))
+
+        n_prog = (X // bx) * (Z // bz) * (Ks // by)
+        if n_prog > MAX_GRID_PROGRAMS:
+            findings.append(Finding(
+                PASS, ERROR, subject,
+                f"quant kernel grid has {n_prog} programs > int32 bound "
+                f"{MAX_GRID_PROGRAMS}"))
+
+        if Ks >= 32 and by < 32:
+            findings.append(Finding(
+                PASS, WARNING, subject,
+                f"quant scale block snaps to {by} (combined K {Ks} has no "
+                f"divisor in [32, 128]): scale arrays are {Ks // by}x larger "
+                f"than the 128-block baseline the decision tier prices"))
     return findings
 
 

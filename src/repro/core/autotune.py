@@ -89,6 +89,14 @@ class ProbeMeasurement:
     # when the grouped probe is skipped (group_size <= 1)
     eff_grouped_est: float | None = None
     group_size: int = 1
+    # int8 probes (``quant=True``): raw int8 GEMM throughput on the full
+    # problem (the FLOPS_int8 the quantized tier is priced with) and the
+    # fused Combine-A+quantize pass (the quant-pass beta). None when the
+    # quant probe was skipped.
+    t_gemm_int8: float | None = None
+    t_quant_combine: float | None = None
+    flops_int8_est: float | None = None
+    beta_quant_est: float | None = None
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -110,6 +118,10 @@ class CalibrationReport:
     # None when the grouped probe was skipped
     eff_grouped: float | None = None
     eff_grouped_predicted: float | None = None
+    # medians of the int8 probes (``quant=True``); flops_int8 is what lands
+    # in the profile's dtype_flops["int8"], beta_quant rides in metadata
+    flops_int8: float | None = None
+    beta_quant: float | None = None
 
     @property
     def max_rel_err(self) -> float | None:
@@ -123,6 +135,8 @@ class CalibrationReport:
             "model_rel_err": self.model_rel_err,
             "eff_grouped": self.eff_grouped,
             "eff_grouped_predicted": self.eff_grouped_predicted,
+            "flops_int8": self.flops_int8,
+            "beta_quant": self.beta_quant,
         }
 
 
@@ -133,7 +147,7 @@ def _combine_bytes(l: LCMA, Mp: int, Kp: int, itemsize: int) -> int:
 
 def _measure_probe(M: int, K: int, N: int, l: LCMA, backend: str, dtype: str,
                    timer: Callable, validate: bool,
-                   group_size: int = 1) -> ProbeMeasurement:
+                   group_size: int = 1, quant: bool = False) -> ProbeMeasurement:
     import jax
     import jax.numpy as jnp
 
@@ -202,10 +216,34 @@ def _measure_probe(M: int, K: int, N: int, l: LCMA, backend: str, dtype: str,
             x, y, (((2,), (1,)), ((0,), (0,)))))
         t_grp = timer(gmm, ag, bg)
         eff_grouped = min(2.0 * G * l.R * X * Ks * Z / t_grp / flops_mul, 1.0)
+    t_g8 = t_qc = flops_int8 = beta_quant = None
+    if quant:
+        # FLOPS_int8: the raw int8 GEMM (int32 accumulation) on the full
+        # problem — the per-dtype peak the quantized tier's GEMM stage is
+        # priced with (``hw.flops_for("int8")``).
+        a8 = jnp.ones((M, K), jnp.int8)
+        b8 = jnp.ones((K, N), jnp.int8)
+        mm8 = jax.jit(lambda x, y: jax.lax.dot_general(
+            x, y, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32))
+        t_g8 = timer(mm8, a8, b8)
+        flops_int8 = 2.0 * M * N * K / t_g8
+        # quant-pass beta: the fused Combine-A + blockwise-quantize kernel —
+        # reads the fp operand, writes int8 Ã plus f32 block scales.
+        from repro.kernels.quant_combine import group_combine_quant
+        qi = interpret or backend == "jnp"
+        qcomb = jax.jit(lambda x: group_combine_quant(x, l.U, interpret=qi))
+        t_qc = timer(qcomb, ap)
+        by = next(d for d in range(min(128, Ks), 0, -1) if Ks % d == 0)
+        qbytes = Mp * Kp * itemsize + l.R * X * Ks + l.R * X * (Ks // by) * 4
+        beta_quant = qbytes / t_qc
     return ProbeMeasurement(M, K, N, dtype, t_gemm, t_comb, t_bat, t_pipe,
                             flops_mul, beta, eff,
                             eff_grouped_est=eff_grouped,
-                            group_size=int(group_size))
+                            group_size=int(group_size),
+                            t_gemm_int8=t_g8, t_quant_combine=t_qc,
+                            flops_int8_est=flops_int8,
+                            beta_quant_est=beta_quant)
 
 
 def measure_collective_bw(size_bytes: int = 8 << 20, reps: int = 3,
@@ -257,12 +295,20 @@ def autotune(base: str | HardwareProfile = "cpu_host", backend: str = "jnp",
              reps: int = 3, warmup: int = 1,
              timer: Callable | None = None, name: str | None = None,
              validate: bool = True, group_size: int = 4,
-             collectives: bool = False) -> CalibrationReport:
+             collectives: bool = False,
+             quant: bool = False) -> CalibrationReport:
     """Measure the backend on probe shapes and fit a calibrated profile.
 
     Returns a :class:`CalibrationReport`; ``report.profile`` is registered
     with ``hardware`` so ``FalconConfig(hardware=report.profile.name)`` and
     ``decide(..., hw=report.profile.name)`` resolve it immediately.
+
+    ``quant=True`` additionally measures the int8 stage — the raw int8 GEMM
+    throughput and the fused Combine-A+quantize pass — and persists the
+    measured FLOPS_int8 as the profile's ``dtype_flops["int8"]``, so the
+    quantized decision tier is priced against measured (not assumed) int8
+    throughput. The profile fingerprint hashes ``dtype_flops``, so persisted
+    plan caches from an unquantized calibration invalidate automatically.
     """
     base_prof = get_profile(base) if isinstance(base, str) else base
     if backend not in ("jnp", "pallas", "pallas_interpret"):
@@ -272,13 +318,20 @@ def autotune(base: str | HardwareProfile = "cpu_host", backend: str = "jnp",
     l = algorithms.get(scheme)
 
     probes = [_measure_probe(M, K, N, l, backend, dtype, timer, validate,
-                             group_size=group_size)
+                             group_size=group_size, quant=quant)
               for (M, K, N) in shapes]
 
     flops_mul = statistics.median(p.flops_mul_est for p in probes)
     beta = statistics.median(p.beta_est for p in probes)
     eff = statistics.median(p.eff_est for p in probes)
     flops_add = beta / dec._dtype_bytes(dtype)  # 1 add/elem at effective BW
+
+    flops_int8 = beta_quant = None
+    if quant:
+        f8s = [p.flops_int8_est for p in probes if p.flops_int8_est]
+        bqs = [p.beta_quant_est for p in probes if p.beta_quant_est]
+        flops_int8 = statistics.median(f8s) if f8s else None
+        beta_quant = statistics.median(bqs) if bqs else None
 
     coll_bw = base_prof.collective_bw
     if collectives:
@@ -294,7 +347,9 @@ def autotune(base: str | HardwareProfile = "cpu_host", backend: str = "jnp",
         beta=beta,
         lcma_gemm_efficiency=eff,
         collective_bw=coll_bw,
-        dtype_flops=None,         # calibration is per measured dtype
+        # calibration is per measured dtype; the only per-dtype override a
+        # calibrated profile carries is the measured int8 peak (quant=True)
+        dtype_flops={"int8": flops_int8} if flops_int8 else None,
     )
     register_profile(prof)
 
@@ -327,7 +382,8 @@ def autotune(base: str | HardwareProfile = "cpu_host", backend: str = "jnp",
     return CalibrationReport(base=base_prof.name, backend=backend, dtype=dtype,
                              scheme=scheme, probes=probes, profile=prof,
                              model_rel_err=rel_err, eff_grouped=eff_grouped,
-                             eff_grouped_predicted=eff_grouped_pred)
+                             eff_grouped_predicted=eff_grouped_pred,
+                             flops_int8=flops_int8, beta_quant=beta_quant)
 
 
 def calibrate(path: str | None = None, block_plan_shapes: bool = True,

@@ -43,6 +43,11 @@ ApplyGroupedFn = Callable
 # serving path against precombined B̃ (R, K/k, N/n) or stacked
 # (G, R, K/k, N/n) — the stacked-PlannedWeight / MoE-expert case.
 ApplyGroupedPrecombinedFn = Callable
+# apply_quant(a2, bq, b_scales, lcma, n_logical, cfg) -> C : int8 serving
+# path against offline-quantized B̃q (R, K/k, N/n) int8 + f32 block scales
+# (the quantized PlannedWeight tier). None means the backend has no int8
+# path and the quantized tier is not servable on it.
+ApplyQuantFn = Callable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +60,7 @@ class Backend:
     apply_precombined: ApplyPrecombinedFn | None = None
     apply_grouped: ApplyGroupedFn | None = None
     apply_grouped_precombined: ApplyGroupedPrecombinedFn | None = None
+    apply_quant: ApplyQuantFn | None = None
     description: str = ""
 
 
@@ -66,6 +72,7 @@ def register_backend(name: str, impl, *, dense_hook: DenseHookFn | None = None,
                      apply_precombined: ApplyPrecombinedFn | None = None,
                      apply_grouped: ApplyGroupedFn | None = None,
                      apply_grouped_precombined: ApplyGroupedPrecombinedFn | None = None,
+                     apply_quant: ApplyQuantFn | None = None,
                      description: str = "", overwrite: bool = False) -> Backend:
     """Register an execution backend under ``name``.
 
@@ -82,6 +89,7 @@ def register_backend(name: str, impl, *, dense_hook: DenseHookFn | None = None,
                      apply_precombined=apply_precombined,
                      apply_grouped=apply_grouped,
                      apply_grouped_precombined=apply_grouped_precombined,
+                     apply_quant=apply_quant,
                      description=description)
     else:
         raise TypeError(f"register_backend: impl must be callable or Backend, "
@@ -177,6 +185,14 @@ def _pallas_grouped_precombined_factory(interpret: bool):
     return apply_grouped_precombined
 
 
+def _pallas_quant_factory(interpret: bool):
+    def apply_quant(a2, bq, b_scales, l, n_logical, cfg):
+        from repro.kernels import ops
+        return ops.falcon_matmul_pallas_quant(
+            a2, bq, b_scales, l, n_logical, interpret=interpret)
+    return apply_quant
+
+
 def _shardmap_dense_hook(x, w, cfg):
     from .falcon_gemm import _falcon_dense_shardmap
     return _falcon_dense_shardmap(x, w, cfg)
@@ -195,18 +211,24 @@ def _ensure_builtins() -> None:
                 apply_precombined=_jnp_apply_precombined,
                 apply_grouped=_jnp_apply_grouped,
                 apply_grouped_precombined=_jnp_apply_grouped_precombined,
+                # the quant pipeline only exists as Pallas kernels; interpret
+                # mode runs them on CPU, so the jnp backend stays servable
+                # in --quant mode
+                apply_quant=_pallas_quant_factory(True),
                 description="generated pure-JAX combines (GSPMD-shardable)"),
             "pallas": Backend(
                 "pallas", _pallas_apply_factory(False),
                 apply_precombined=_pallas_precombined_factory(False),
                 apply_grouped=_pallas_grouped_factory(False),
                 apply_grouped_precombined=_pallas_grouped_precombined_factory(False),
+                apply_quant=_pallas_quant_factory(False),
                 description="on-TPU Pallas kernel pipeline"),
             "pallas_interpret": Backend(
                 "pallas_interpret", _pallas_apply_factory(True),
                 apply_precombined=_pallas_precombined_factory(True),
                 apply_grouped=_pallas_grouped_factory(True),
                 apply_grouped_precombined=_pallas_grouped_precombined_factory(True),
+                apply_quant=_pallas_quant_factory(True),
                 description="Pallas pipeline in interpret mode (CPU CI)"),
             "shard_map_local": Backend(
                 "shard_map_local", _jnp_apply,

@@ -154,6 +154,12 @@ class PlannedWeight:
 
     Stacked weights (leading layer/codebook dim) are supported: children are
     stacked alike, ``pw[i]`` slices both.
+
+    When planned under ``cfg.quantize``, a 2-D weight additionally carries the
+    offline-quantized B̃q (int8) and its f32 block scales
+    (``kernels.quant_combine.quantize_b_blockwise``), so the serve path can
+    route through the backend's int8 ``apply_quant`` pipeline whenever the
+    Decision Module picks the quantized tier at the actual M.
     """
 
     w: Any                  # original weight (K, N) [or (L, K, N)]; None if dropped
@@ -161,6 +167,8 @@ class PlannedWeight:
     algo: str | None        # LCMA scheme name; None => standard GEMM
     k: int                  # logical K of the matrix (trailing dims)
     n: int                  # logical N
+    bq: Any = None          # quantized B̃q int8 (R, K/k, N/n); None if fp-only
+    b_scales: Any = None    # f32 block scales (R, (K/k)/by, N/n)
 
     @property
     def lcma(self) -> LCMA | None:
@@ -170,20 +178,27 @@ class PlannedWeight:
     def precombined(self) -> bool:
         return self.bt is not None
 
+    @property
+    def quantized(self) -> bool:
+        return self.bq is not None
+
     def __getitem__(self, idx) -> "PlannedWeight":
         return PlannedWeight(
             w=None if self.w is None else self.w[idx],
             bt=None if self.bt is None else self.bt[idx],
-            algo=self.algo, k=self.k, n=self.n)
+            algo=self.algo, k=self.k, n=self.n,
+            bq=None if self.bq is None else self.bq[idx],
+            b_scales=None if self.b_scales is None else self.b_scales[idx])
 
     def tree_flatten(self):
-        return (self.w, self.bt), (self.algo, self.k, self.n)
+        return (self.w, self.bt, self.bq, self.b_scales), \
+            (self.algo, self.k, self.n)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        w, bt = children
+        w, bt, bq, b_scales = children
         algo, k, n = aux
-        return cls(w=w, bt=bt, algo=algo, k=k, n=n)
+        return cls(w=w, bt=bt, algo=algo, k=k, n=n, bq=bq, b_scales=b_scales)
 
 
 def plan_weight(w: jnp.ndarray, cfg: FalconConfig | None = None,
@@ -225,8 +240,42 @@ def plan_weight(w: jnp.ndarray, cfg: FalconConfig | None = None,
     l = d.algo
     bt = precombine_weights(w, l) if w.ndim == 2 else \
         jax.vmap(lambda wi: precombine_weights(wi, l))(w)
+    # Under cfg.quantize, also bake the int8 quant buffers — regardless of
+    # which precision won at m_hint: the serve-time re-decision picks fp vs
+    # int8 at the *actual* M, and both executions must be available from the
+    # same PlannedWeight. Stacked (scan-layer) weights quantize per slice;
+    # ``pw[i]`` slices the quant buffers alongside w/B̃.
+    bq = b_scales = None
+    if cfg.quantize \
+            and backends.get_backend(cfg.backend).apply_quant is not None:
+        interp = cfg.backend != "pallas"
+        if w.ndim == 2:
+            bq, b_scales = _quantize_weight(w, l, interpret=interp)
+        else:
+            per = [_quantize_weight(w[i], l, interpret=interp)
+                   for i in range(w.shape[0])]
+            bq = jnp.stack([q for q, _ in per])
+            b_scales = jnp.stack([s for _, s in per])
     return PlannedWeight(w=w if keep_weight else None, bt=bt,
-                         algo=l.name, k=K, n=N)
+                         algo=l.name, k=K, n=N, bq=bq, b_scales=b_scales)
+
+
+def _quantize_weight(w: jnp.ndarray, l: LCMA, by: int | None = None,
+                     interpret: bool = True):
+    """Offline Combine-B + blockwise int8 quantization of a 2-D weight.
+
+    Returns ``(B̃q int8 (R, K/k, N/n), f32 scales (R, (K/k)/by, N/n))`` —
+    the PlannedWeight quant buffers consumed by the backends' ``apply_quant``
+    pipeline. ``by`` defaults to the largest divisor of the combined K
+    (<= 128) so the fused int8 kernel's accumulator blocks divide exactly;
+    128 << the int32 safe accumulation depth (analysis.stability).
+    """
+    from repro.kernels.quant_combine import quantize_b_blockwise
+    wp = _pad2(w, l.k, l.n)
+    Y = wp.shape[0] // l.k
+    if by is None:
+        by = next(d for d in range(min(128, Y), 0, -1) if Y % d == 0)
+    return quantize_b_blockwise(wp, l.V, by=by, interpret=interpret)
 
 
 _DEFAULT_PRECOMBINE_PATTERNS = (
@@ -294,19 +343,31 @@ def _apply_planned(x: jnp.ndarray, pw: PlannedWeight,
         if out is not None:
             return out
     x2 = x.reshape(-1, K)
+    use_quant = False
     if cfg.mode == pw.algo or pw.w is None:
         use_pre = True           # forced scheme, or raw weight dropped
+        use_quant = pw.quantized and cfg.quantize
     elif not cfg.enabled or cfg.mode == "gemm":
         use_pre = False
     else:
         # Re-decide for the *actual* M (decode M is tiny, prefill M is large)
         # with Combine B free; restrict candidates to the precombined scheme.
+        # cfg.quantize rides through the replace, so the decision also picks
+        # the precision tier — int8 routes to the baked quant buffers below.
         d = plan(x2.shape[0], K, pw.n,
                  dataclasses.replace(cfg, mode="auto", candidates=(pw.algo,)),
                  str(x.dtype), precombined_b=True)
         use_pre = d.use_lcma
+        use_quant = pw.quantized and d.quantized
     if not use_pre:
         return jnp.matmul(x, pw.w)
+    if use_quant and be.apply_quant is not None:
+        if cfg.planned_vjp and pw.w is not None:
+            out2 = _pw_quant_core(cfg, pw.algo, pw.n)(
+                x2, pw.w, pw.bq, pw.b_scales)
+        else:
+            out2 = be.apply_quant(x2, pw.bq, pw.b_scales, pw.lcma, pw.n, cfg)
+        return out2.reshape(*lead, pw.n)
     if cfg.planned_vjp:
         # Trainable precombined apply: the custom-VJP core routes the
         # gradient to the raw weight (planned dW = x2ᵀ g) when it is kept,
@@ -893,6 +954,46 @@ def _pw_core(cfg: FalconConfig, algo: str, n_logical: int, trainable: bool):
     return core_bt
 
 
+@functools.lru_cache(maxsize=None)
+def _pw_quant_core(cfg: FalconConfig, algo: str, n_logical: int):
+    """custom-VJP core for a quantized PlannedWeight apply.
+
+    The primal runs the backend's int8 pipeline against the offline-baked
+    B̃q + block scales (the quantized serving fast path). The backward stays
+    fp: ``dx`` and ``dw`` are independently planned falcon contractions
+    against the RAW weight — quantization error never enters the gradient —
+    and the quant buffers get symbolic-zero cotangents (B̃q is int8, whose
+    tangent type is float0); :func:`refresh_planned_params` re-derives them
+    after each optimizer update, exactly like B̃.
+    """
+    l = algorithms.get(algo)
+
+    def primal(x2, bq, b_scales):
+        be = backends.get_backend(cfg.backend)
+        return be.apply_quant(x2, bq, b_scales, l, n_logical, cfg)
+
+    @jax.custom_vjp
+    def core(x2, w, bq, b_scales):
+        return primal(x2, bq, b_scales)
+
+    def fwd(x2, w, bq, b_scales):
+        # runs only under differentiation: price the backward triple here so
+        # inference traces never pay for (or cache) dA/dB plans
+        plan_training(x2.shape[0], x2.shape[1], n_logical, cfg,
+                      str(x2.dtype))
+        return primal(x2, bq, b_scales), (x2, w, bq, b_scales)
+
+    def bwd(res, g):
+        x2, w, bq, b_scales = res
+        dx = _dispatch2d(g, w.T, cfg).astype(x2.dtype)
+        dw = _dispatch2d(x2.T, g, cfg).astype(w.dtype)
+        dbq = np.zeros(bq.shape, jax.dtypes.float0)
+        return dx, dw, dbq, jnp.zeros_like(b_scales)
+
+    core.defvjp(fwd, bwd)
+    return core
+
+
 def refresh_planned_params(params):
     """Re-derive every PlannedWeight's B̃ from its (just-updated) raw weight.
 
@@ -909,7 +1010,13 @@ def refresh_planned_params(params):
         lc = leaf.lcma
         bt = precombine_weights(leaf.w, lc) if leaf.w.ndim == 2 else \
             jax.vmap(lambda wi: precombine_weights(wi, lc))(leaf.w)
-        return dataclasses.replace(leaf, bt=bt)
+        if leaf.bq is None:
+            return dataclasses.replace(leaf, bt=bt)
+        # quantized PlannedWeight: re-bake B̃q + scales from the updated
+        # weight too (same block size the original buffers were built with)
+        by = int(leaf.bq.shape[1]) // int(leaf.b_scales.shape[1])
+        bq, b_scales = _quantize_weight(leaf.w, lc, by=by)
+        return dataclasses.replace(leaf, bt=bt, bq=bq, b_scales=b_scales)
 
     return jax.tree_util.tree_map(
         refresh, params, is_leaf=lambda x: isinstance(x, PlannedWeight))

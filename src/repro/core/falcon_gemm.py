@@ -59,6 +59,12 @@ class FalconConfig:
     # exceeds the budget are rejected BEFORE pricing (falcon-check's
     # ``stability`` pass, read by the Decision Module). None disables.
     accuracy_budget: float | None = None
+    # Put the int8-quantized tier into the Decision Module's search: every
+    # budget-eligible candidate is additionally priced quantized
+    # (``decision.estimate_quant``) and the winner's tier lands in
+    # ``Decision.precision``. Selection stays gated by ``accuracy_budget``
+    # (int8 eps = 1/(2*127) in the stability model).
+    quantize: bool = False
     # Per-device scaling of (M, K, N) under pjit: number of shards per dim.
     shards: tuple[int, int, int] = (1, 1, 1)
     # Memoize auto-mode Decisions in the process plan cache (serving hot path
@@ -163,14 +169,14 @@ def plan(M: int, K: int, N: int, cfg: FalconConfig, dtype: str = "bfloat16",
             precombined_b=precombined_b, mode=cfg.mode,
             candidates=cfg.candidates, max_grid=cfg.max_grid,
             min_speedup=cfg.min_speedup,
-            accuracy_budget=cfg.accuracy_budget)
+            accuracy_budget=cfg.accuracy_budget, quantize=cfg.quantize)
         hit = cache.lookup(key)
         if hit is not None:
             return hit
     d = dec.decide(Ml, Nl, Kl, cfg.profile, dtype,
                    candidates=cfg.candidate_schemes(), fused=cfg.fused,
                    precombined_b=precombined_b, min_speedup=cfg.min_speedup,
-                   accuracy_budget=cfg.accuracy_budget)
+                   accuracy_budget=cfg.accuracy_budget, quantize=cfg.quantize)
     if cache is not None:
         cache.insert(key, d)
     return d
@@ -234,7 +240,7 @@ def plan_sharded(M: int, K: int, N: int, cfg: FalconConfig,
             precombined_b=precombined_b, mode=cfg.mode,
             candidates=cfg.candidates, max_grid=cfg.max_grid,
             min_speedup=cfg.min_speedup,
-            accuracy_budget=cfg.accuracy_budget,
+            accuracy_budget=cfg.accuracy_budget, quantize=cfg.quantize,
             layout=",".join(l.name for l in layouts), n_devices=n_devices)
         hit = cache.lookup(key)
         if isinstance(hit, dec.ShardedDecision):
@@ -243,7 +249,8 @@ def plan_sharded(M: int, K: int, N: int, cfg: FalconConfig,
                            layouts=layouts, candidates=cand,
                            fused=cfg.fused, precombined_b=precombined_b,
                            min_speedup=cfg.min_speedup,
-                           accuracy_budget=cfg.accuracy_budget)
+                           accuracy_budget=cfg.accuracy_budget,
+                           quantize=cfg.quantize)
     if cache is not None:
         cache.insert(key, d)
     return d
@@ -290,7 +297,7 @@ def plan_batched(B: int, M: int, K: int, N: int, cfg: FalconConfig,
             precombined_b=precombined_b, mode=cfg.mode,
             candidates=cfg.candidates, max_grid=cfg.max_grid,
             min_speedup=cfg.min_speedup, batch=B, shared_b=shared_b,
-            accuracy_budget=cfg.accuracy_budget)
+            accuracy_budget=cfg.accuracy_budget, quantize=cfg.quantize)
         hit = cache.lookup(key)
         if isinstance(hit, dec.GroupedDecision):
             return hit
@@ -298,7 +305,8 @@ def plan_batched(B: int, M: int, K: int, N: int, cfg: FalconConfig,
                            candidates=cfg.candidate_schemes(), fused=cfg.fused,
                            precombined_b=precombined_b, shared_b=shared_b,
                            min_speedup=cfg.min_speedup,
-                           accuracy_budget=cfg.accuracy_budget)
+                           accuracy_budget=cfg.accuracy_budget,
+                           quantize=cfg.quantize)
     if cache is not None:
         cache.insert(key, d)
     return d

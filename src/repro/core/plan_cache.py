@@ -93,7 +93,8 @@ def plan_key(M: int, K: int, N: int, hw: HardwareProfile, dtype: str, *,
              max_grid: int = 5, min_speedup: float = 1.0,
              batch: int = 1, shared_b: bool = False,
              layout: str | None = None, n_devices: int = 1,
-             accuracy_budget: float | None = None) -> str:
+             accuracy_budget: float | None = None,
+             quantize: bool = False) -> str:
     """Cache key for one Decision-Module invocation (local, per-device shape).
 
     ``batch > 1`` keys a *grouped* decision (``plan_batched``): the whole
@@ -112,6 +113,10 @@ def plan_key(M: int, K: int, N: int, hw: HardwareProfile, dtype: str, *,
     a budget narrows the candidate set statically (stability-pass filter), so
     a budgeted plan must not alias the unbudgeted one — while budget-free
     keys keep the historical format and existing persisted caches stay valid.
+
+    ``quantize`` appends a ``quant=1`` token only when the int8 tier was in
+    the candidate search (same conditional-token discipline: fp-only keys are
+    byte-identical to the historical format, old caches stay valid).
     """
     cands = ",".join(candidates) if candidates is not None else f"grid<={max_grid}"
     shape = f"{M}x{K}x{N}" if batch == 1 else \
@@ -123,6 +128,8 @@ def plan_key(M: int, K: int, N: int, hw: HardwareProfile, dtype: str, *,
     ]
     if accuracy_budget is not None:
         parts.append(f"ab={accuracy_budget:g}")
+    if quantize:
+        parts.append("quant=1")
     if layout is not None:
         parts.append(f"ly={layout}xD{int(n_devices)}@cb={hw.coll_bw():g}")
     return "|".join(parts)
@@ -175,6 +182,8 @@ def _encode(d: dec.Decision) -> dict:
         # cache-audit pass both prove the cached decision still refers to the
         # coefficients it priced (a renamed/edited scheme drops the entry).
         out["algo_fp"] = d.algo.fingerprint
+    if d.precision != "fp":
+        out["prec"] = d.precision
     if isinstance(d, dec.GroupedDecision):
         out["B"] = d.B
         out["shared_b"] = d.shared_b
@@ -202,6 +211,7 @@ def _decode(payload: dict) -> dec.Decision | None:
             lcma_seconds=(None if payload["lcma_seconds"] is None
                           else float(payload["lcma_seconds"])),
             estimates=(),
+            precision=str(payload.get("prec", "fp")),
         )
         if "B" in payload:   # grouped entry (plan_batched)
             return dec.GroupedDecision(B=int(payload["B"]),

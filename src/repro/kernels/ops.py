@@ -18,6 +18,7 @@ from repro.core.falcon_gemm import _pad2, _pad3
 from .fused_gemm import (batched_fused_gemm_combine_h, fused_gemm_combine_h,
                          tiled_matmul)
 from .group_combine import batched_group_combine, group_combine
+from .quant_combine import fused_gemm_combine_h_quant, group_combine_quant
 
 
 @partial(jax.jit, static_argnames=("l", "block_combine", "block_gemm", "interpret"))
@@ -73,6 +74,51 @@ def falcon_matmul_pallas_precombined(
                               out_dtype=a.dtype, interpret=interpret)
     m, n, X, Z = cp.shape
     c = cp.transpose(0, 2, 1, 3).reshape(m * X, n * Z)
+    return c[:M, :n_logical]
+
+
+@partial(jax.jit, static_argnames=("l", "n_logical", "block_combine",
+                                   "block_gemm", "interpret"))
+def falcon_matmul_pallas_quant(
+        a: jnp.ndarray, bq: jnp.ndarray, b_scales: jnp.ndarray, l: LCMA,
+        n_logical: int, block_combine: tuple[int, int] | None = None,
+        block_gemm: tuple[int, int, int] | None = None,
+        interpret: bool = False) -> jnp.ndarray:
+    """Quantized serving pipeline against offline-quantized B̃q + scales.
+
+    The int8 variant of ``falcon_matmul_pallas_precombined``: Group Combine A
+    runs fused with quantization (``group_combine_quant`` — one HBM pass over
+    A, int8 Ã plus per-(row, K-block) f32 scales out), then the fused int8
+    GEMM + dequantizing Combine H. ``bq``/``b_scales`` come from
+    ``quantize_b_blockwise`` (the PlannedWeight quant buffers); the A-side
+    scale block is forced to B's so the two block-scale grids line up.
+    """
+    M, K = a.shape
+    ap = _pad2(a, l.m, l.k)
+    Y = bq.shape[1]
+    if ap.shape[1] // l.k != Y:
+        raise ValueError(
+            f"falcon_matmul_pallas_quant: activation K={K} (padded "
+            f"{ap.shape[1]}, grid k={l.k}) does not match quantized "
+            f"B̃q {tuple(bq.shape)} for scheme {l.name} {l.key}")
+    by = Y // b_scales.shape[1]
+    bcx = block_combine[0] if block_combine else 128
+    at, a_scales = group_combine_quant(ap, l.U, block=(bcx, by),
+                                       interpret=interpret)
+    X = ap.shape[0] // l.m
+    Z = bq.shape[2]
+    if block_gemm is not None:
+        bx, bz = block_gemm[0], block_gemm[1]
+    else:
+        # the fused kernel asserts exact divisibility; snap its defaults to
+        # the largest divisors <= 128 (same idiom as group_combine_quant)
+        bx = next(d for d in range(min(128, X), 0, -1) if X % d == 0)
+        bz = next(d for d in range(min(128, Z), 0, -1) if Z % d == 0)
+    cp = fused_gemm_combine_h_quant(at, a_scales, bq, b_scales, l.W,
+                                    block=(bx, bz, by), out_dtype=a.dtype,
+                                    interpret=interpret)
+    m, n, Xc, Zc = cp.shape
+    c = cp.transpose(0, 2, 1, 3).reshape(m * Xc, n * Zc)
     return c[:M, :n_logical]
 
 

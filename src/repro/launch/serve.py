@@ -18,6 +18,7 @@ Combine B via ``PlannedWeight``, persistent plan cache):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -47,6 +48,12 @@ def main() -> None:
                     help="lift static weights to PlannedWeights (offline "
                          "Combine B) where the Decision Module picks an LCMA")
     ap.add_argument("--no-precombine", dest="precombine", action="store_false")
+    ap.add_argument("--quant", action="store_true",
+                    help="serve with the int8-quantized decision tier: the "
+                         "Decision Module prices quantized execution next to "
+                         "fp under the accuracy budget, PlannedWeights carry "
+                         "offline-quantized B̃q + scales, and warm() pre-"
+                         "plans the quantized buckets (--continuous)")
     ap.add_argument("--plan-cache", default=None, metavar="PATH",
                     help="persistent Decision plan cache (JSON, written by "
                          "repro.tools.tune); loaded before tracing and "
@@ -100,12 +107,13 @@ def _run_continuous(cfg, args) -> None:
     engine = ServeEngine(
         cfg, max_slots=args.max_slots, max_prompt_len=args.prompt_len,
         max_new_tokens=args.gen, precombine=args.precombine, seed=args.seed,
-        mesh_shape=args.mesh_shape)
+        mesh_shape=args.mesh_shape, quantize=args.quant)
     if engine.mesh is not None:
         print(f"mesh: {dict(engine.mesh.shape)} over "
               f"{len(jax.devices())} visible device(s)")
     print(f"engine: {args.max_slots} slots, cache len {engine.max_len}, "
-          f"{engine.n_precombined} weight tensor(s) precombined, buckets "
+          f"{engine.n_precombined} weight tensor(s) precombined"
+          f"{' (int8-quantized tier on)' if args.quant else ''}, buckets "
           f"seq={list(engine.policy.prefill_seq)} "
           f"prefill_batch={list(engine.policy.prefill_batch)} "
           f"decode_batch={list(engine.policy.decode_batch)}")
@@ -141,6 +149,8 @@ def _run_continuous(cfg, args) -> None:
 def _run_oneshot(cfg, args) -> None:
     mesh = make_local_mesh()
     fcfg = M.falcon_config_for(cfg, dict(mesh.shape))
+    if args.quant:
+        fcfg = dataclasses.replace(fcfg, quantize=True)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
     max_len = args.prompt_len + args.gen

@@ -24,6 +24,7 @@ eager decode (``tests/test_serve_engine.py``).
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import threading
 import time
 
@@ -70,7 +71,8 @@ class ServeEngine:
                  max_slots: int = 8, max_prompt_len: int = 64,
                  max_new_tokens: int = 32, policy: BucketPolicy | None = None,
                  precombine: bool = True, record_logits: bool = False,
-                 seed: int = 0, mesh_shape: dict | None = None):
+                 seed: int = 0, mesh_shape: dict | None = None,
+                 quantize: bool = False):
         if model_cfg.family != "dense" or model_cfg.frontend:
             raise NotImplementedError(
                 f"ServeEngine supports dense token models; got "
@@ -84,7 +86,14 @@ class ServeEngine:
         self.record_logits = record_logits
         self.mesh_shape = dict(mesh_shape or {})
         self.mesh = self._build_mesh(self.mesh_shape)
+        self.quantize = bool(quantize)
         self.fcfg = M.falcon_config_for(model_cfg, self.mesh_shape)
+        if self.quantize:
+            # int8-quantized serving: the Decision Module prices the quant
+            # tier alongside fp (plan-cache keys gain the quant token),
+            # precombine below bakes B̃q + scales into each PlannedWeight,
+            # and warm() pre-plans the quantized buckets.
+            self.fcfg = dataclasses.replace(self.fcfg, quantize=True)
         with falcon.use(self.fcfg), self._mesh_ctx():
             self.params = params if params is not None \
                 else M.init_params(model_cfg, jax.random.PRNGKey(seed))
@@ -311,6 +320,7 @@ class ServeEngine:
         d["plan_cache"] = plan_cache.stats().as_dict()
         d["plan_cache"]["entries"] = len(plan_cache.default_cache())
         d["precombined_weights"] = self.n_precombined
+        d["quantize"] = self.quantize
         d["max_len"] = self.max_len
         d["max_slots"] = self.max_slots
         d["mesh"] = self.mesh_shape or None

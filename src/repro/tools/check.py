@@ -18,9 +18,10 @@ non-zero iff any pass reports an *error* (warnings and info pass):
   * ``cache-audit``  — invariants of a persisted plan-cache JSON
     (``--cache PATH``; ``--all`` audits a freshly round-tripped cache).
 
-Individual passes are selectable (``--library``, ``--plans``, ``--cache``,
-``--scheme``, ``--scheme-file``, ``--quant-accum``); everything is static —
-no kernel is compiled or launched by any code path in this tool.
+Individual passes are selectable (``--library``, ``--plans``,
+``--quant-plans``, ``--cache``, ``--scheme``, ``--scheme-file``,
+``--quant-accum``); everything is static — no kernel is compiled or launched
+by any code path in this tool.
 """
 from __future__ import annotations
 
@@ -111,6 +112,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--plans", action="store_true",
                     help="lint candidate schemes' block plans on the probe "
                          "shapes against --hardware")
+    ap.add_argument("--quant-plans", action="store_true",
+                    help="lint the int8-quantized pipeline each candidate "
+                         "would run on the probe shapes: backend legality, "
+                         "accumulator overflow, scale-block divisibility")
     ap.add_argument("--codegen", action="store_true",
                     help="AST-lint the generated source of every candidate")
     ap.add_argument("--cache", metavar="PATH",
@@ -146,12 +151,12 @@ def main(argv: list[str] | None = None) -> int:
                     help="include info-level findings in the report")
     args = ap.parse_args(argv)
 
-    if not any((args.all, args.library, args.plans, args.codegen, args.cache,
-                args.plan_file, args.scheme, args.scheme_file,
-                args.quant_accum)):
+    if not any((args.all, args.library, args.plans, args.quant_plans,
+                args.codegen, args.cache, args.plan_file, args.scheme,
+                args.scheme_file, args.quant_accum)):
         ap.error("nothing to check: pass --all or a specific pass "
-                 "(--library/--plans/--codegen/--cache/--plan-file/--scheme/"
-                 "--scheme-file/--quant-accum)")
+                 "(--library/--plans/--quant-plans/--codegen/--cache/"
+                 "--plan-file/--scheme/--scheme-file/--quant-accum)")
 
     # Heavy imports after arg parsing so `--help` stays instant.
     from repro import analysis
@@ -175,6 +180,11 @@ def main(argv: list[str] | None = None) -> int:
         for l in algorithms.candidates():
             findings.extend(analysis.lint_scheme_plans(
                 l, shapes, hw, dtype=args.dtype, backend=args.backend))
+
+    if args.all or args.quant_plans:
+        for l in algorithms.candidates():
+            findings.extend(analysis.lint_quant_plans(
+                l, shapes, hw, backend=args.backend))
 
     if args.all:
         _roundtrip_cache_audit(hw, "bfloat16", findings)

@@ -60,6 +60,11 @@ def main(argv: list[str] | None = None) -> int:
                     help="skip plan-cache warmup")
     ap.add_argument("--warm-dtype", default="bfloat16",
                     help="dtype for plan-cache warmup decisions")
+    ap.add_argument("--quant", action="store_true",
+                    help="probe the int8 stage too (raw int8 GEMM + fused "
+                         "Combine-A+quantize) and persist the measured "
+                         "FLOPS_int8 as the profile's dtype_flops['int8'] — "
+                         "what the quantized decision tier is priced with")
     ap.add_argument("--collectives", action="store_true",
                     help="probe effective all-gather/reduce-scatter bandwidth "
                          "across local devices and record it on the profile "
@@ -106,7 +111,7 @@ def main(argv: list[str] | None = None) -> int:
         path=args.out, base=args.hardware, backend=args.backend,
         shapes=args.shape, dtype=args.dtype, scheme=args.scheme,
         reps=args.reps, warmup=args.warmup, name=args.name,
-        collectives=args.collectives)
+        collectives=args.collectives, quant=args.quant)
     prof = report.profile
 
     def tera(x):
@@ -128,6 +133,11 @@ def main(argv: list[str] | None = None) -> int:
         else:
             print(f"  collective probe skipped: single local device "
                   f"(link_bw fallback {tera(base.coll_bw())})")
+    if args.quant and report.flops_int8 is not None:
+        print(f"  {'FLOPS_int8 (quant GEMM)':24s} "
+              f"{tera(base.flops_for('int8'))} {tera(report.flops_int8)}")
+        print(f"  {'beta_quant (bytes/s)':24s} {'':>10s} "
+              f"{tera(report.beta_quant)}")
     if report.max_rel_err is not None:
         print(f"  model-vs-measured pipeline rel.err: "
               f"max {report.max_rel_err:.1%} over {len(report.model_rel_err)} probes")

@@ -86,3 +86,53 @@ def test_sharded_estimate_bounded_below_by_local(M, N, K, D, layout_name):
                                     layout=ly, n_devices=D)
     assert est_paid.time >= local
     assert est_paid.collective.time >= 0.0
+
+
+@settings(max_examples=40)
+@given(DIMS, DIMS, DIMS, st.integers(1, 2048), PROFILES)
+def test_quant_estimate_monotone_in_each_dim(M, N, K, step, hw):
+    """Growing any of M/N/K never makes a quantized estimate cheaper."""
+    base = dec.estimate_quant(STRASSEN, M, N, K, hw).time
+    for grown in ((M + step, N, K), (M, N + step, K), (M, N, K + step)):
+        assert dec.estimate_quant(STRASSEN, *grown, hw).time >= base
+
+
+@settings(max_examples=40)
+@given(st.integers(64, 4096), st.integers(64, 4096), st.integers(64, 4096),
+       st.floats(1e-6, 1e-1), PROFILES)
+def test_quant_tier_respects_accuracy_budget(M, N, K, budget, hw):
+    """The int8 tier never wins past its static error bound.
+
+    ``decide(..., quantize=True)`` may only return precision="int8" when the
+    winning scheme's int8 bound fits the budget; a budget below every
+    candidate's bound (int8 eps is ~3.9e-3, so 1e-6 is below all of them)
+    must always yield an fp decision.
+    """
+    d = dec.decide(M, N, K, hw, "float32", quantize=True,
+                   accuracy_budget=budget)
+    if d.quantized:
+        assert d.algo.stability.within_budget(budget, "int8")
+    d_tight = dec.decide(M, N, K, hw, "float32", quantize=True,
+                         accuracy_budget=1e-6)
+    assert not d_tight.quantized
+    assert d_tight.precision == "fp"
+    assert all(e.precision != "int8" for e in d_tight.estimates)
+
+
+@settings(max_examples=60)
+@given(st.integers(1, 512), st.integers(1, 512), st.integers(1, 512),
+       st.sampled_from([False, True]), st.integers(1, 4))
+def test_plan_key_injective_across_precision(M, K, N, quantize, batch):
+    """quantize=True/False key disjoint cache slots for every shape/batch.
+
+    A collision would hand the fp pipeline a quantized plan (or vice versa);
+    the quant token must also survive alongside the grouped-key format.
+    """
+    seen = getattr(test_plan_key_injective_across_precision, "_seen", None)
+    if seen is None:
+        seen = test_plan_key_injective_across_precision._seen = {}
+    params = (M, K, N, quantize, batch)
+    key = plan_cache.plan_key(M, K, N, TPU_V5E, "bfloat16", batch=batch,
+                              quantize=quantize)
+    assert seen.setdefault(key, params) == params, \
+        f"plan_key collision: {key!r} for {params} and {seen[key]}"
