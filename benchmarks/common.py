@@ -6,9 +6,12 @@ import time
 import jax
 import numpy as np
 
-# Paper §IV-B LLM projection shapes — shared with the tune CLI's cache
-# warming so benchmark and deploy-time shape grids cannot drift.
-from repro.core.workloads import LLM_SHAPES  # noqa: F401
+# Paper §IV-B LLM projection (K, N) pairs, derived from the workload
+# registry's paper contraction sets — the same source the tune CLI's cache
+# warming consumes, so benchmark and deploy-time shape grids cannot drift.
+from repro.core.workloads import paper_projection_shapes, paper_workloads
+
+LLM_SHAPES = {w: paper_projection_shapes(w) for w in paper_workloads()}
 
 
 def time_fn(fn, *args, warmup: int = 2, reps: int = 5) -> float:

@@ -23,7 +23,8 @@ import numpy as np
 from repro.core import algorithms as alg, autotune, codegen, decision as dec, plan_cache
 from repro.core.falcon_gemm import FalconConfig, plan
 from repro.core.hardware import CPU_HOST
-from .common import LLM_SHAPES, time_fn
+from repro.core.workloads import paper_projection_shapes
+from .common import time_fn
 
 
 def _time_plan(M, K, N, cfg, reps=5):
@@ -40,7 +41,8 @@ def run_amortization(batch_tokens=(512, 2048), workload="deepseek_r1",
     """Cold vs warm plan() latency + hit rate over LLM serving shapes."""
     cache = plan_cache.configure(path=None)          # fresh in-memory cache
     cfg = FalconConfig(hardware="tpu_v5e")
-    shapes = [(m, k, n) for m in batch_tokens for k, n in LLM_SHAPES[workload]]
+    shapes = [(m, k, n) for m in batch_tokens
+              for k, n in paper_projection_shapes(workload)]
     rows = []
     cold = warm = 0.0
     for (m, k, n) in shapes:

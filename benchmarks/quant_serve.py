@@ -20,7 +20,6 @@ quantized LCMA tier for the serving buckets) and reports:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
 import time
 
@@ -39,9 +38,7 @@ REL_BUDGET = 0.15
 
 
 def _widened_cfg():
-    return dataclasses.replace(
-        registry.smoke_config("granite_3_2b"),
-        d_model=256, d_ff=512, vocab_size=512, num_heads=4, num_kv_heads=4)
+    return registry.lcma_smoke_config("granite_3_2b")
 
 
 def _gemm_gflops(dtype, M=512, K=512, N=512, reps=3):

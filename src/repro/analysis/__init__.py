@@ -20,7 +20,7 @@ from .stability import (SchemeStability, analyze, check_library_stability,
                         check_quant_accumulator, check_scheme_stability,
                         dtype_eps, int8_accum_bound, max_safe_accum_depth)
 from .plans import (BACKEND_DTYPES, lint_block_plan, lint_codegen,
-                    lint_quant_plans, lint_scheme_plans)
+                    lint_quant_plans, lint_scheme_plans, lint_workload)
 from .cache_audit import audit_cache_file, audit_entries
 
 __all__ = [
@@ -30,6 +30,6 @@ __all__ = [
     "check_library_stability", "dtype_eps", "int8_accum_bound",
     "max_safe_accum_depth", "check_quant_accumulator",
     "lint_block_plan", "lint_scheme_plans", "lint_quant_plans",
-    "lint_codegen", "BACKEND_DTYPES",
+    "lint_workload", "lint_codegen", "BACKEND_DTYPES",
     "audit_cache_file", "audit_entries",
 ]

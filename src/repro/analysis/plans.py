@@ -26,7 +26,8 @@ from repro.core.hardware import HardwareProfile
 from .findings import ERROR, WARNING, Finding
 
 __all__ = ["lint_block_plan", "lint_scheme_plans", "lint_quant_plans",
-           "lint_codegen", "BACKEND_DTYPES", "MAX_GRID_PROGRAMS"]
+           "lint_workload", "lint_codegen", "BACKEND_DTYPES",
+           "MAX_GRID_PROGRAMS"]
 
 PASS = "plan-lint"
 CODEGEN_PASS = "codegen-lint"
@@ -170,6 +171,55 @@ def lint_scheme_plans(l: LCMA, shapes, hw: HardwareProfile, *,
         findings.extend(lint_block_plan(
             plan, hw, dtype=dtype, backend=backend,
             subject=f"{l.name}@{M}x{K}x{N}/{dtype}"))
+    return findings
+
+
+def lint_workload(arch, hw: HardwareProfile, *, batch: int = 8,
+                  seq: int = 512, dtype: str | None = None,
+                  backend: str = "pallas", train: bool = False,
+                  quantize: bool = False, mesh_shape=None,
+                  all_candidates: bool = False) -> list[Finding]:
+    """Statically lint an architecture's full contraction set against ``hw``.
+
+    The workload registry (``core.workloads``) enumerates every planned
+    contraction ``arch`` issues at (batch, seq); for each unique contraction
+    shape, the Decision Module picks its scheme and that scheme's block plan
+    is linted (divisibility, grid bounds, VMEM vs the profile) — the same
+    checks serving trusts at launch, run offline without compiling a kernel.
+    ``all_candidates=True`` lints EVERY candidate scheme per shape instead
+    (a scheme the decision would never pick may legitimately fail there,
+    e.g. an int32 grid overflow on a huge lm_head — useful for triage, not
+    for CI gating). With ``quantize=True`` the int8 pipeline of each
+    weight-static contraction is linted too. ``arch`` is a registry id /
+    paper workload name or a ``ModelConfig``.
+    """
+    from repro.core import algorithms, decision
+    from repro.core.workloads import resolve_contractions, _resolve_arch
+    from repro.kernels import tuning
+
+    cfg = _resolve_arch(arch)
+    name = getattr(cfg, "name", str(arch))
+    dtype = str(dtype or getattr(cfg, "dtype", "bfloat16"))
+    findings: list[Finding] = []
+    for c in resolve_contractions(arch, batch, seq, train=train,
+                                  mesh_shape=mesh_shape):
+        if quantize and not (c.weight_static and c.kind in
+                             ("dense", "grouped_moe")):
+            continue
+        m, k, n = c.shape
+        if all_candidates:
+            schemes = list(algorithms.candidates())
+        else:
+            d = decision.decide(m, n, k, hw, dtype)
+            schemes = [d.algo] if d.use_lcma else []
+        for l in schemes:
+            plan = tuning.block_plans(l, m, k, n, dtype=dtype, hw=hw)
+            findings.extend(lint_block_plan(
+                plan, hw, dtype=dtype, backend=backend,
+                subject=f"{name}:{c.role}:{l.name}@{m}x{k}x{n}/{dtype}"))
+            if quantize:
+                findings.extend(lint_quant_plans(
+                    l, [(m, k, n)], hw, backend=backend))
     return findings
 
 

@@ -36,6 +36,9 @@ from repro.core.falcon_gemm import (FalconConfig, falcon_dense, falcon_matmul,
                                     plan_batched, plan_sharded,
                                     plan_training,
                                     precombine_weights)
+from repro.core.workloads import (Contraction, ContractionSpec,
+                                  contraction_set, dense_projection_shapes,
+                                  grouped_moe_shapes, resolve_contractions)
 
 __all__ = [
     # context-scoped config
@@ -50,6 +53,9 @@ __all__ = [
     # precombined weights (offline Combine B)
     "PlannedWeight", "plan_weight", "precombine_params",
     "precombine_weights", "matmul_with_precombined",
+    # workload registry (config -> contraction set -> warm plan)
+    "ContractionSpec", "Contraction", "contraction_set",
+    "resolve_contractions", "dense_projection_shapes", "grouped_moe_shapes",
     # bucket pre-planning (continuous-batching serve path)
     "warm_buckets", "projection_shapes",
     # backend registry

@@ -56,3 +56,19 @@ def smoke_config(arch: str) -> ModelConfig:
         fsdp=False,
         falcon_mode=full.falcon_mode,
     )
+
+
+def lcma_smoke_config(arch: str) -> ModelConfig:
+    """Smoke config widened past the smallest LCMA tier.
+
+    ``smoke_config`` at d_model=64 sits below every LCMA dimension tier, so
+    the Decision Module always picks the classical scheme and quant/scheme
+    tests see no LCMA coverage. This variant keeps the family and layer
+    count but widens the projections (d_model=256, d_ff=512) so strassen /
+    two-level tiers become eligible, and trims the vocab so logits stay
+    cheap. Shared by ``tests/test_quant_serve.py`` and
+    ``benchmarks/quant_serve.py`` — previously each hand-rolled its own
+    widened copy.
+    """
+    return dataclasses.replace(
+        smoke_config(arch), d_model=256, d_ff=512, vocab_size=512)

@@ -38,8 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import algorithms, backends
-from .decision import backward_shapes
+from . import algorithms, backends, workloads
 from .falcon_gemm import (FalconConfig, _lcma_apply, _lcma_apply_grouped,
                           _pad2, grouped_matmul_with_precombined,
                           matmul_with_precombined, plan, plan_batched,
@@ -388,87 +387,91 @@ def _apply_planned(x: jnp.ndarray, pw: PlannedWeight,
 # ---------------------------------------------------------------------------
 
 def projection_shapes(arch) -> list[tuple[int, int]]:
-    """The (K, N) dense-projection shapes a decoder ``arch`` dispatches.
+    """Deprecated shim: the (K, N) dense-projection shapes of ``arch``.
 
-    Duck-typed on :class:`~repro.configs.base.ModelConfig` fields so the core
-    layer stays import-free of the config zoo. Covers attention projections,
-    the MLP (swiglu or gelu), SSM in/out where present, and the (padded)
-    LM head — the same set ``precombine_params`` lifts.
+    The workload registry (``core.workloads``) is the one source of an
+    architecture's contraction inventory now; use
+    ``workloads.dense_projection_shapes(arch)`` (or the full
+    ``contraction_set``/``resolve_contractions``) instead.
     """
-    d = int(arch.d_model)
-    shapes: list[tuple[int, int]] = []
-    H = int(getattr(arch, "num_heads", 0))
-    if H:
-        hd = int(arch.resolved_head_dim)
-        Hkv = int(getattr(arch, "num_kv_heads", H))
-        shapes += [(d, H * hd), (d, Hkv * hd), (H * hd, d)]
-    ff = int(getattr(arch, "d_ff", 0))
-    if ff:
-        shapes += [(d, ff), (ff, d)]
-    sh = int(getattr(arch, "ssm_heads", 0))
-    if sh:
-        d_inner = sh * int(getattr(arch, "ssm_head_dim", 64))
-        gn = int(getattr(arch, "ssm_groups", 1)) * int(getattr(arch, "ssm_state", 0))
-        shapes += [(d, 2 * d_inner + 2 * gn + sh), (d_inner, d)]
-    V = int(getattr(arch, "vocab_size", 0))
-    if V:
-        shapes.append((d, -(-V // 256) * 256))   # padded vocab (models.padded_vocab)
-    seen: set[tuple[int, int]] = set()
-    return [s for s in shapes if not (s in seen or seen.add(s))]
+    warnings.warn(
+        "falcon.projection_shapes is deprecated; use "
+        "repro.core.workloads.dense_projection_shapes / contraction_set "
+        "(the workload registry) instead", DeprecationWarning, stacklevel=2)
+    return workloads.dense_projection_shapes(arch)
 
 
 def grouped_expert_shapes(arch, m_tokens: int,
                           mesh_shape: dict | None = None,
                           ) -> list[tuple[int, int, int, int]]:
-    """The grouped (E, C, K, N) contractions a MoE ``arch`` dispatches.
+    """Deprecated shim: grouped (E, C, K, N) MoE contractions of ``arch``.
 
-    For ``m_tokens`` activation rows entering the MoE block, each of the E
-    experts sees a capacity-C token block (the same formula ``moe_apply``
-    uses), and the three FFN projections run as grouped contractions
-    ``E x (C, K) @ (K, N)``. Empty for dense architectures.
-
-    ``mesh_shape`` scales to the PER-SHARD group a device actually runs under
-    expert parallelism: experts divide over the "model" axis (when they do —
-    ``moe_apply``'s own gate) and each shard routes its local token slice, so
-    capacity is computed from the per-data-shard token count.
+    Use ``workloads.grouped_moe_shapes(arch, m_tokens, mesh_shape)`` (the
+    workload registry) instead.
     """
-    E = int(getattr(arch, "num_experts", 0))
-    if not E:
-        return []
-    from .workloads import moe_capacity
-    mesh_shape = mesh_shape or {}
-    nm = int(mesh_shape.get("model", 1))
-    nd = int(mesh_shape.get("data", 1)) * int(mesh_shape.get("pod", 1) or 1)
-    if nm > 1 and E % nm == 0:
-        E //= nm
-    m_tokens = max(-(-m_tokens // nd), 1)
-    d = int(arch.d_model)
-    ff = int(getattr(arch, "d_ff", 0))
-    top_k = int(getattr(arch, "experts_per_token", 0)) or 1
-    cf = float(getattr(arch, "capacity_factor", 1.25))
-    # shard_round=True: the model layer stack serves with the 256-rounded
-    # shardable capacity, and the grouped plan-cache keys embed C
-    C = moe_capacity(m_tokens, top_k, E, cf, shard_round=True)
-    shapes = [(d, ff), (ff, d)]          # gate/up share (d, ff); down is (ff, d)
-    return [(E, C, K, N) for (K, N) in shapes]
+    warnings.warn(
+        "falcon.grouped_expert_shapes is deprecated; use "
+        "repro.core.workloads.grouped_moe_shapes (the workload registry) "
+        "instead", DeprecationWarning, stacklevel=2)
+    return workloads.grouped_moe_shapes(arch, m_tokens, mesh_shape)
+
+
+def _warm_contraction(c, cfg: FalconConfig, dtype: str,
+                      pre_algos: dict, pre_algos_grouped: dict) -> int:
+    """Plan one resolved registry contraction (+ precombined variant)."""
+    n = 0
+    if c.group == 1:
+        plan(c.m, c.k, c.n, cfg, dtype)
+        n += 1
+        if c.weight_static:
+            d_pre = plan(c.m, c.k, c.n, cfg, dtype, precombined_b=True)
+            if d_pre.use_lcma:
+                pre_algos.setdefault((c.k, c.n), set()).add(d_pre.algo.name)
+            n += 1
+    else:
+        plan_batched(c.group, c.m, c.k, c.n, cfg, dtype, shared_b=c.shared_b)
+        n += 1
+        if c.weight_static:
+            d_pre = plan_batched(c.group, c.m, c.k, c.n, cfg, dtype,
+                                 precombined_b=True, shared_b=c.shared_b)
+            if d_pre.use_lcma:
+                pre_algos_grouped.setdefault(
+                    (c.group, c.k, c.n), set()).add(d_pre.algo.name)
+            n += 1
+    return n
 
 
 def warm_buckets(cfg: FalconConfig | None, arch, buckets,
                  dtype: str | None = None, train: bool = False,
-                 mesh_shape: dict | None = None) -> int:
-    """Pre-plan every projection of ``arch`` at every bucketed M.
+                 mesh_shape: dict | None = None,
+                 kv_len: int | None = None) -> int:
+    """Pre-plan the registry contraction set of ``arch`` at every bucket.
 
     The continuous-batching scheduler only ever launches bucket shapes, so
-    running the Decision Module once per (bucket M) x (projection K, N) —
-    both the plain and the precombined-B profitability variants — means
-    serve-time traces are pure plan-cache hits. Returns the number of
-    ``plan()`` calls issued. ``buckets`` are activation-row counts
-    (batch x padded-seq for prefill buckets, batch for decode buckets).
+    running the Decision Module once per bucket x registry contraction —
+    both the plain and the precombined-B profitability variants for
+    static-weight contractions — means serve-time traces are pure plan-cache
+    hits. Returns the number of ``plan()``/``plan_batched()`` calls issued.
+    Every shape comes from ``core.workloads`` (the workload registry), the
+    one source of an architecture's contraction inventory.
 
-    ``train=True`` additionally pre-plans both *backward* shapes of each
-    projection (``decision.backward_shapes``), so one warm pass at
-    ``buckets=[batch * seq]`` makes a whole jitted train step — forward and
-    planned custom-VJP backward — trace against a hot plan cache.
+    ``buckets`` entries are either
+
+      * ``int`` — a flat activation-row count (batch x padded-seq for
+        prefill buckets, batch for decode buckets): warms the dense
+        projections and grouped MoE expert shapes at that M (the batch/seq
+        split being unknown, the activation-side attention/SSD groups are
+        left to the engine's jit warm loop), or
+      * ``(batch, seq)`` — a full call context: resolves the complete
+        registry inventory including attention einsums and SSD scan/decode
+        contractions (``seq == 1`` with ``kv_len`` set is treated as a
+        decode step against a length-``kv_len`` cache).
+
+    ``train=True`` additionally pre-plans both *backward* contractions of
+    each forward one (``decision.backward_shapes`` / the grouped grad
+    rules), so one warm pass at ``buckets=[(batch, seq)]`` makes a whole
+    jitted train step — forward and planned custom-VJP backward — trace
+    against a hot plan cache.
 
     ``mesh_shape`` warms the PER-SHARD grouped MoE shapes a multi-device
     engine dispatches (experts over "model", tokens over "data") instead of
@@ -477,52 +480,62 @@ def warm_buckets(cfg: FalconConfig | None, arch, buckets,
     cfg = _resolve(cfg)
     dtype = dtype or str(getattr(arch, "dtype", "bfloat16"))
     n = 0
-    buckets = sorted(set(int(b) for b in buckets))
+    flat = sorted({int(b) for b in buckets if not isinstance(b, tuple)})
+    pairs = sorted({(int(b), int(s)) for (b, s) in
+                    (b for b in buckets if isinstance(b, tuple))})
     pre_algos: dict[tuple[int, int], set[str]] = {}
     pre_algos_grouped: dict[tuple[int, int, int], set[str]] = {}
-    for M in buckets:
-        for (K, N) in projection_shapes(arch):
-            plan(M, K, N, cfg, dtype)
-            d_pre = plan(M, K, N, cfg, dtype, precombined_b=True)
-            if d_pre.use_lcma:
-                pre_algos.setdefault((K, N), set()).add(d_pre.algo.name)
-            n += 2
-            if train:
-                for (Mb, Kb, Nb) in backward_shapes(M, K, N):
-                    plan(Mb, Kb, Nb, cfg, dtype)
-                    n += 1
-        # MoE expert FFNs dispatch as grouped contractions (one plan-cache
-        # key per grouped shape), so decode/prefill-time MoE traces hit the
-        # cache like every dense projection does.
-        for (E, C, K, N) in grouped_expert_shapes(arch, M, mesh_shape):
-            plan_batched(E, C, K, N, cfg, dtype)
-            d_pre = plan_batched(E, C, K, N, cfg, dtype, precombined_b=True)
-            if d_pre.use_lcma:
-                pre_algos_grouped.setdefault((E, K, N), set()).add(
-                    d_pre.algo.name)
-            n += 2
-            if train:
-                plan_batched(E, C, N, K, cfg, dtype)     # dA
-                plan_batched(E, K, C, N, cfg, dtype)     # dB
-                n += 2
+
+    contractions: list = []
+    for M in flat:
+        # flat M = batch-of-1 token count: the dense/grouped-MoE inventory
+        # (legacy bucket semantics; attention/SSD groups need a batch/seq
+        # split, which (batch, seq) buckets provide)
+        contractions += [
+            c for c in workloads.resolve_contractions(
+                arch, 1, M, train=train, mesh_shape=mesh_shape)
+            if c.kind in ("dense", "grouped_moe")]
+    for (b, s) in pairs:
+        decode = kv_len is not None and s == 1
+        contractions += workloads.resolve_contractions(
+            arch, b, s, train=train, mesh_shape=mesh_shape,
+            kv_len=kv_len, decode=decode)
+
+    # static-weight contractions first, so a shape shared between a weight
+    # contraction and an activation one keeps its precombined variant
+    contractions.sort(key=lambda c: not c.weight_static)
+    seen: set[str] = set()
+    for c in contractions:
+        tok = c.key_shape()
+        if tok in seen:
+            continue
+        seen.add(tok)
+        n += _warm_contraction(c, cfg, dtype, pre_algos, pre_algos_grouped)
+
     # The PlannedWeight apply path re-decides at the actual M with candidates
     # restricted to the weight's own scheme — a differently-keyed plan (the
     # candidate set is part of the key). Pre-plan those restricted variants
     # for every scheme any bucket's precombined decision picked, so the
     # serve-time re-decision is a cache hit too, at every bucket M.
     if cfg.mode == "auto":
-        for M in buckets:
-            for (K, N), algos in pre_algos.items():
-                for a in sorted(algos):
-                    plan(M, K, N,
+        planned: set[str] = set()
+        for c in contractions:
+            tok = c.key_shape()
+            if not c.weight_static or tok in planned:
+                continue
+            planned.add(tok)
+            if c.group == 1:
+                for a in sorted(pre_algos.get((c.k, c.n), ())):
+                    plan(c.m, c.k, c.n,
                          dataclasses.replace(cfg, candidates=(a,)),
                          dtype, precombined_b=True)
                     n += 1
-            for (E, C, K, N) in grouped_expert_shapes(arch, M, mesh_shape):
-                for a in sorted(pre_algos_grouped.get((E, K, N), ())):
-                    plan_batched(E, C, K, N,
+            else:
+                for a in sorted(pre_algos_grouped.get(
+                        (c.group, c.k, c.n), ())):
+                    plan_batched(c.group, c.m, c.k, c.n,
                                  dataclasses.replace(cfg, candidates=(a,)),
-                                 dtype, precombined_b=True)
+                                 dtype, precombined_b=True, shared_b=c.shared_b)
                     n += 1
     return n
 

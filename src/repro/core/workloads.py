@@ -1,14 +1,44 @@
-"""Serving workload shape tables shared by benchmarks and the tune CLI.
+"""Workload registry: one config -> contraction set -> warm-plan spine.
 
-Linear-layer (N, K) projection shapes extracted from the paper's three LLM
-workloads (§IV-B): DeepSeek-R1-, Qwen3.5- and HunyuanVideo-style projections.
-Kept under ``src/`` (not ``benchmarks/``) so installed entry points —
-``repro.tools.tune`` cache warming — and the benchmark suite price the same
-shapes and cannot drift apart.
+Every planned contraction a :class:`~repro.configs.base.ModelConfig` will
+issue — dense projections, grouped MoE expert blocks, attention einsums, SSD
+chunked-scan and decode contractions — is enumerated **once** here, as
+symbolic :class:`ContractionSpec` entries, and resolved to concrete plan
+shapes by :func:`resolve_contractions`. This is the ONE source consumed by
+
+  * ``core.engine.warm_buckets`` / ``ServeEngine.warm`` (plan-cache warmup),
+  * ``repro.tools.tune`` cache warming (``warm_shapes``),
+  * ``falcon-check --workload`` (static lint of an arch's contraction set),
+  * the benchmark suite (paper §IV-B projection grids), and
+  * the registry-coverage tests (``tests/test_config_matrix.py`` proves a
+    fwd+bwd trace creates no plan-cache key outside the registry).
+
+Per-layer heterogeneous stacks (hymba/nemotron-style) are expressed through
+``ContractionSpec.layers``: ``()`` means "every layer of this block type";
+a tuple of indices pins a spec to specific layers. The hybrid family emits
+attention *and* SSD specs — each layer's block types contribute their own
+registry entries.
+
+The paper's three LLM serving workloads (§IV-B, DeepSeek-R1 / Qwen3.5 /
+HunyuanVideo projections) live here too, as registry entries addressable by
+name, so the tune CLI and benchmarks derive identical shape grids from
+``contraction_set("deepseek_r1")`` and cannot drift.
 """
 from __future__ import annotations
 
-LLM_SHAPES = {
+import dataclasses
+import math
+
+__all__ = [
+    "ContractionSpec", "Contraction", "contraction_set",
+    "resolve_contractions", "dense_projection_shapes", "grouped_moe_shapes",
+    "paper_workloads", "paper_projection_shapes", "warm_shapes",
+    "shape_token", "moe_capacity", "WARM_TOKENS", "WARM_SQUARE",
+]
+
+# Paper §IV-B LLM projection (K, N) pairs. Data only — addressed through
+# contraction_set(<name>) / paper_projection_shapes(<name>).
+_PAPER_PROJECTIONS = {
     "deepseek_r1": [(7168, 18432), (18432, 7168), (7168, 2048), (2048, 7168),
                     (7168, 4096), (4096, 7168), (1536, 7168), (7168, 1536),
                     (7168, 9216), (9216, 7168), (7168, 7168)],
@@ -23,12 +53,67 @@ LLM_SHAPES = {
 WARM_TOKENS = [128, 512, 2048, 8192]
 WARM_SQUARE = [512, 1024, 2048, 4096, 8192, 16384]
 
+# The flash-attention query chunk (models.layers.flash_attention): no-cache
+# attention over sequences longer than this runs in 512-query chunks.
+_FLASH_Q_CHUNK = 512
+# lm-head cross-entropy chunk cap (models.model._chunked_xent).
+_XENT_CHUNK = 512
 
-def warm_shapes(workload: str = "deepseek_r1") -> list[tuple[int, int, int]]:
-    """(M, K, N) grid the tune CLI warms the plan cache with."""
-    out = [(m, k, n) for m in WARM_TOKENS for k, n in LLM_SHAPES[workload]]
-    out += [(s, s, s) for s in WARM_SQUARE]
-    return out
+
+@dataclasses.dataclass(frozen=True)
+class ContractionSpec:
+    """One planned contraction class, with symbolic M/K/N/group dims.
+
+    Dims are ints (from the config) or symbol strings resolved per call
+    context by :func:`resolve_contractions`:
+
+    ``tokens``          batch * (padded) sequence — dense projection rows
+    ``logit_tokens``    lm-head rows (xent chunk in training, B at decode)
+    ``attn_q``/``attn_kv``/``head_dim``   attention einsum dims
+    ``capacity``        per-expert MoE capacity C (moe_capacity)
+    ``ssd_chunk``/``ssd_state``/``ssd_head_dim``   SSD scan dims
+    ``one``             literal 1 (SSD decode readout rows)
+
+    ``group`` symbols: ``experts`` (E, mesh-scaled), ``attn_groups`` (B*H),
+    ``ssd_groups`` (B*n_chunks*H), ``ssd_decode_groups`` (B*H).
+    """
+    kind: str              # dense | grouped_moe | attention | ssd_scan |
+    #                        ssd_decode | cross_attn (vocabulary reserved)
+    role: str              # e.g. "attn.w_q", "moe.down", "ssd.scores"
+    m: int | str
+    k: int | str
+    n: int | str
+    group: int | str = 1          # 1 => plain 2-D contraction
+    shared_b: bool = False
+    # B operand is a static model weight => precombinable offline
+    # (falcon.precombine_params) and eligible for the int8 quant tier.
+    weight_static: bool = True
+    # () => every layer with this block type; tuple => specific layer indices
+    # (per-layer heterogeneity, hymba/nemotron-style).
+    layers: tuple[int, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class Contraction:
+    """A concrete resolved contraction — what the plan cache is keyed on."""
+    kind: str
+    role: str
+    m: int
+    k: int
+    n: int
+    group: int = 1
+    shared_b: bool = False
+    weight_static: bool = True
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return (self.m, self.k, self.n)
+
+    def key_shape(self) -> str:
+        """The shape token as it appears inside a plan-cache key."""
+        if self.group == 1:
+            return f"{self.m}x{self.k}x{self.n}"
+        return f"g{self.group}x{self.m}x{self.k}x{self.n}|sb={int(self.shared_b)}"
 
 
 def moe_capacity(tokens: int, top_k: int, num_experts: int,
@@ -38,12 +123,395 @@ def moe_capacity(tokens: int, top_k: int, num_experts: int,
     THE one definition of MoE capacity — shared by ``models.moe.moe_apply``,
     the layer stack (``models.model``, which passes ``shard_round=True`` to
     round capacities above 256 up to a 256 multiple for shardability), and
-    ``core.engine.grouped_expert_shapes`` (warm-bucket pre-planning). The
-    grouped plan-cache keys embed C, so these sites must agree bit-for-bit;
-    sharing the formula is what enforces it.
+    the registry resolver here (warm-bucket pre-planning). The grouped
+    plan-cache keys embed C, so these sites must agree bit-for-bit; sharing
+    the formula is what enforces it.
     """
-    import math
     c = max(math.ceil(tokens * top_k / num_experts * capacity_factor), 8)
     if shard_round and c > 256:
         c = -(-c // 256) * 256
     return c
+
+
+def _resolve_arch(arch):
+    """str -> ModelConfig via the configs registry; pass configs through."""
+    if isinstance(arch, str):
+        from repro.configs import registry
+        return registry.get_config(arch)
+    return arch
+
+
+def _mesh_factors(mesh_shape) -> tuple[int, int]:
+    """-> (data shards, model shards). Accepts the engine's axis-name dict
+    (``{"data": .., "model": .., "pod": ..}``) or a plain (data, model)
+    tuple; None => single device."""
+    if not mesh_shape:
+        return 1, 1
+    if isinstance(mesh_shape, dict):
+        nd = int(mesh_shape.get("data", 1)) * int(mesh_shape.get("pod", 1) or 1)
+        return max(nd, 1), int(mesh_shape.get("model", 1)) or 1
+    nd = int(mesh_shape[0]) or 1
+    nm = int(mesh_shape[1]) if len(mesh_shape) > 1 else 1
+    return max(nd, 1), max(nm, 1)
+
+
+def paper_workloads() -> list[str]:
+    """The paper's §IV-B LLM workload names (addressable by contraction_set)."""
+    return list(_PAPER_PROJECTIONS)
+
+
+def paper_projection_shapes(workload: str) -> list[tuple[int, int]]:
+    """(K, N) projection pairs of one paper workload, via the registry."""
+    return [(s.k, s.n) for s in contraction_set(workload)]
+
+
+def _paper_specs(workload: str) -> list[ContractionSpec]:
+    return [ContractionSpec("dense", f"{workload}.proj{i}", "tokens", k, n)
+            for i, (k, n) in enumerate(_PAPER_PROJECTIONS[workload])]
+
+
+def _model_specs(cfg) -> list[ContractionSpec]:
+    """Forward contraction specs for one ModelConfig (duck-typed).
+
+    Duck-typed on :class:`~repro.configs.base.ModelConfig` fields (getattr
+    with defaults) so the core layer stays import-free of the config zoo —
+    block presence follows what ``models.model._layer_body`` actually
+    dispatches: MoE replaces the dense MLP, the pure-SSM family has neither
+    attention nor an MLP.
+    """
+    d = int(cfg.d_model)
+    fam = getattr(cfg, "family", None)
+    E = int(getattr(cfg, "num_experts", 0))
+    is_moe = bool(E) and fam in (None, "moe")
+    specs: list[ContractionSpec] = []
+
+    # --- attention block (every family except pure SSM) ---
+    heads = int(getattr(cfg, "num_heads", 0))
+    if heads and fam != "ssm":
+        hd = int(cfg.resolved_head_dim if hasattr(cfg, "resolved_head_dim")
+                 else (getattr(cfg, "head_dim", 0) or d // heads))
+        kv = int(getattr(cfg, "num_kv_heads", heads) or heads)
+        specs += [
+            ContractionSpec("dense", "attn.w_q", "tokens", d, heads * hd),
+            ContractionSpec("dense", "attn.w_k", "tokens", d, kv * hd),
+            ContractionSpec("dense", "attn.w_v", "tokens", d, kv * hd),
+            ContractionSpec("dense", "attn.w_o", "tokens", heads * hd, d),
+            # QK^T and AV einsums: grouped over B*H heads (GQA K/V are
+            # repeated up to H before the einsum), activation x activation.
+            ContractionSpec("attention", "attn.qk", "attn_q", "head_dim",
+                            "attn_kv", group="attn_groups",
+                            weight_static=False),
+            ContractionSpec("attention", "attn.av", "attn_q", "attn_kv",
+                            "head_dim", group="attn_groups",
+                            weight_static=False),
+        ]
+
+    # --- dense MLP (not for moe: experts replace it; never for pure SSM) ---
+    ff = int(getattr(cfg, "d_ff", 0))
+    if ff and fam != "ssm" and not is_moe:
+        if getattr(cfg, "mlp_type", "swiglu") == "swiglu":
+            specs.append(ContractionSpec("dense", "mlp.gate", "tokens", d, ff))
+        specs += [
+            ContractionSpec("dense", "mlp.up", "tokens", d, ff),
+            ContractionSpec("dense", "mlp.down", "tokens", ff, d),
+        ]
+
+    # --- grouped MoE expert FFN (router is a plain f32 matmul, not planned) ---
+    if is_moe:
+        specs += [
+            ContractionSpec("grouped_moe", "moe.gate", "capacity", d, ff,
+                            group="experts"),
+            ContractionSpec("grouped_moe", "moe.up", "capacity", d, ff,
+                            group="experts"),
+            ContractionSpec("grouped_moe", "moe.down", "capacity", ff, d,
+                            group="experts"),
+        ]
+
+    # --- SSD (mamba2-style state-space duality) block ---
+    sh = int(getattr(cfg, "ssm_heads", 0))
+    if sh and fam in (None, "ssm", "hybrid"):
+        P = getattr(cfg, "ssm_head_dim", 64)
+        G = getattr(cfg, "ssm_groups", 1)
+        Ns = getattr(cfg, "ssm_state", 0)
+        d_inner = sh * P
+        d_in_proj = 2 * d_inner + 2 * G * Ns + sh
+        specs += [
+            ContractionSpec("dense", "ssm.in_proj", "tokens", d, d_in_proj),
+            ContractionSpec("dense", "ssm.out_proj", "tokens", d_inner, d),
+            # chunked-scan contractions (models.ssd.ssd_scan), grouped over
+            # B * n_chunks * H; decay factors are folded into the operands
+            # elementwise so each einsum is one 2-operand grouped GEMM.
+            ContractionSpec("ssd_scan", "ssd.scores", "ssd_chunk",
+                            "ssd_state", "ssd_chunk", group="ssd_groups",
+                            weight_static=False),
+            ContractionSpec("ssd_scan", "ssd.y_diag", "ssd_chunk",
+                            "ssd_chunk", "ssd_head_dim", group="ssd_groups",
+                            weight_static=False),
+            ContractionSpec("ssd_scan", "ssd.states", "ssd_state",
+                            "ssd_chunk", "ssd_head_dim", group="ssd_groups",
+                            weight_static=False),
+            ContractionSpec("ssd_scan", "ssd.y_off", "ssd_chunk",
+                            "ssd_state", "ssd_head_dim", group="ssd_groups",
+                            weight_static=False),
+            # single-token recurrence (models.ssd.ssd_decode_step)
+            ContractionSpec("ssd_decode", "ssd.state_update", "ssd_state",
+                            "one", "ssd_head_dim", group="ssd_decode_groups",
+                            weight_static=False),
+            ContractionSpec("ssd_decode", "ssd.readout", "one", "ssd_state",
+                            "ssd_head_dim", group="ssd_decode_groups",
+                            weight_static=False),
+        ]
+
+    # --- lm head (audio runs one per codebook; same (d, Vp) shape) ---
+    V = int(getattr(cfg, "vocab_size", 0))
+    if V:
+        vp = -(-V // 256) * 256   # padded vocab (models.padded_vocab)
+        specs.append(ContractionSpec("dense", "lm_head", "logit_tokens", d, vp))
+    return specs
+
+
+def contraction_set(arch, *, train: bool = False, mesh_shape=None,
+                    quantize: bool = False) -> list[ContractionSpec]:
+    """Every planned contraction ``arch`` will issue, as symbolic specs.
+
+    ``arch`` is a :class:`ModelConfig`, a registry arch id
+    (``"mamba2_370m"``), or a paper workload name (``"deepseek_r1"``).
+
+    ``train=True`` appends the two backward specs per forward contraction
+    (``role.dA``/``role.dB`` — the planned custom-VJP grad GEMMs).
+    ``mesh_shape=(data, model)`` scales the ``experts`` group to the
+    per-shard expert count. ``quantize=True`` restricts the set to the
+    contractions the int8 tier can serve (static-weight B operands).
+    """
+    if isinstance(arch, str) and arch in _PAPER_PROJECTIONS:
+        specs = _paper_specs(arch)
+    else:
+        specs = _model_specs(_resolve_arch(arch))
+
+    if mesh_shape:
+        _, nm = _mesh_factors(mesh_shape)
+        def _scale(s):
+            if s.group == "experts":
+                E = _resolve_arch(arch).num_experts
+                return dataclasses.replace(
+                    s, group=E // nm if nm > 1 and E % nm == 0 else E)
+            return s
+        specs = [_scale(s) for s in specs]
+
+    if train:
+        specs = specs + [b for s in specs for b in _backward_specs(s)]
+    if quantize:
+        specs = [s for s in specs
+                 if s.weight_static and s.kind in ("dense", "grouped_moe")]
+    return specs
+
+
+def _backward_specs(s: ContractionSpec) -> list[ContractionSpec]:
+    """Symbolic backward contractions of one forward spec.
+
+    Dense ``(M,K,N)`` -> dA ``(M,N,K)``, dB ``(K,M,N)``
+    (``core.decision.backward_shapes``); grouped keeps the group:
+    dA ``(G,M,N,K)``, dB ``(G,K,M,N)`` — matching the planned custom-VJP
+    grad rules in ``core.engine``. Shared-B grouped dB collapses to a dense
+    ``(K, G*M, N)``; no current model spec is shared-B, so that case is
+    resolved concretely in :func:`resolve_contractions` only.
+    """
+    return [
+        dataclasses.replace(s, role=s.role + ".dA", m=s.m, k=s.n, n=s.k,
+                            weight_static=False),
+        dataclasses.replace(s, role=s.role + ".dB", m=s.k, k=s.m, n=s.n,
+                            weight_static=False),
+    ]
+
+
+def _shape_env(cfg, batch: int, seq: int, *, kv_len=None, decode=False,
+               mesh_shape=None) -> dict:
+    """Symbol values for one (batch, seq) call context.
+
+    ``kv_len`` set => serving against a KV/state cache of that length
+    (attention keys span the cache, lm head sees one row per sequence);
+    ``decode=True`` => single-token step (seq is the number of new tokens,
+    normally 1).
+    """
+    patches = (cfg.num_patches
+               if getattr(cfg, "frontend", "") == "vision_patches" else 0)
+    S = seq + patches
+    nd, _ = _mesh_factors(mesh_shape)
+    tokens = batch * S
+    heads = getattr(cfg, "num_heads", 0)
+    env: dict = {"one": 1, "tokens": tokens, "batch": batch, "seq": S}
+
+    if decode:
+        env["attn_q"], env["attn_kv"] = 1, (kv_len or S)
+    elif kv_len is not None:
+        env["attn_q"], env["attn_kv"] = S, kv_len
+    else:
+        flash = S > _FLASH_Q_CHUNK and S % _FLASH_Q_CHUNK == 0
+        env["attn_q"] = _FLASH_Q_CHUNK if flash else S
+        env["attn_kv"] = S
+    env["attn_groups"] = batch * heads
+    env["head_dim"] = (cfg.resolved_head_dim
+                       if hasattr(cfg, "resolved_head_dim") else
+                       getattr(cfg, "head_dim", 0))
+
+    if kv_len is not None or decode:
+        env["logit_tokens"] = batch
+    else:
+        cx = min(_XENT_CHUNK, seq)
+        while cx > 1 and seq % cx:
+            cx -= 1
+        env["logit_tokens"] = batch * cx
+
+    E = int(getattr(cfg, "num_experts", 0))
+    if E:
+        m_tokens = max(-(-tokens // nd), 1)
+        env["capacity"] = moe_capacity(
+            m_tokens, int(getattr(cfg, "experts_per_token", 0)) or 1, E,
+            float(getattr(cfg, "capacity_factor", 1.25)), shard_round=True)
+        env["experts"] = E
+
+    sh = getattr(cfg, "ssm_heads", 0)
+    if sh:
+        chunk = getattr(cfg, "ssm_chunk", 256)
+        n_chunks = max(1, -(-S // chunk))
+        env.update(ssd_chunk=chunk, ssd_state=getattr(cfg, "ssm_state", 0),
+                   ssd_head_dim=getattr(cfg, "ssm_head_dim", 64),
+                   ssd_groups=batch * n_chunks * sh,
+                   ssd_decode_groups=batch * sh)
+    return env
+
+
+def resolve_contractions(arch, batch: int, seq: int, *, train: bool = False,
+                         mesh_shape=None, kv_len=None,
+                         decode: bool = False) -> list[Contraction]:
+    """Concrete contraction inventory for one (batch, seq) call context.
+
+    Returns deduplicated :class:`Contraction` entries whose ``key_shape()``
+    tokens are exactly what ``core.plan_cache`` keys embed. ``train=True``
+    includes both backward contractions per forward one (shared-B grouped
+    dB resolves to its dense ``(K, G*M, N)`` form). ``decode=True`` keeps
+    only the single-token inventory (SSD recurrence instead of the scan);
+    prefill/train keeps the scan and drops the decode recurrence.
+    """
+    cfg = _resolve_arch(arch) if not (
+        isinstance(arch, str) and arch in _PAPER_PROJECTIONS) else arch
+    specs = contraction_set(arch, mesh_shape=mesh_shape)
+    env = _shape_env(cfg, batch, seq, kv_len=kv_len, decode=decode,
+                     mesh_shape=mesh_shape) if not isinstance(cfg, str) else {
+        "tokens": batch * seq}
+
+    def val(x):
+        return env[x] if isinstance(x, str) else x
+
+    out: list[Contraction] = []
+    seen: set = set()
+
+    def emit(c: Contraction):
+        key = (c.key_shape(), c.kind)
+        if key not in seen:
+            seen.add(key)
+            out.append(c)
+
+    for s in specs:
+        if decode and s.kind == "ssd_scan":
+            continue
+        if not decode and s.kind == "ssd_decode":
+            continue
+        g = val(s.group)
+        c = Contraction(s.kind, s.role, val(s.m), val(s.k), val(s.n),
+                        group=g, shared_b=s.shared_b,
+                        weight_static=s.weight_static)
+        emit(c)
+        if train:
+            emit(Contraction(c.kind, c.role + ".dA", c.m, c.n, c.k,
+                             group=c.group, shared_b=c.shared_b,
+                             weight_static=False))
+            if c.group != 1 and c.shared_b:
+                emit(Contraction("dense", c.role + ".dB", c.k,
+                                 c.group * c.m, c.n, weight_static=False))
+            else:
+                emit(Contraction(c.kind, c.role + ".dB", c.k, c.m, c.n,
+                                 group=c.group, shared_b=c.shared_b,
+                                 weight_static=False))
+    return out
+
+
+def dense_projection_shapes(arch) -> list[tuple[int, int]]:
+    """Deduplicated dense-projection ``(K, N)`` pairs of one arch.
+
+    The registry-backed successor of ``core.engine.projection_shapes``:
+    per-token 2-D weight contractions only (attention/ssd/lm-head
+    projections), excluding the grouped/einsum kinds.
+    """
+    out: list[tuple[int, int]] = []
+    for s in contraction_set(arch):
+        if s.kind != "dense":
+            continue
+        kn = (s.k, s.n)
+        if kn not in out:
+            out.append(kn)
+    return out
+
+
+def grouped_moe_shapes(arch, m_tokens: int,
+                       mesh_shape=None) -> list[tuple[int, int, int, int]]:
+    """Grouped MoE expert shapes ``(E, C, K, N)`` at ``m_tokens`` rows.
+
+    Registry-backed successor of ``core.engine.grouped_expert_shapes``;
+    deduplicated, mesh-scaled like the serve path (tokens over data shards,
+    experts over model shards).
+    """
+    cfg = _resolve_arch(arch)
+    E = int(getattr(cfg, "num_experts", 0))
+    if not E:
+        return []
+    specs = [s for s in contraction_set(cfg, mesh_shape=mesh_shape)
+             if s.kind == "grouped_moe"]
+    nd, nm = _mesh_factors(mesh_shape)
+    if nm > 1 and E % nm == 0:
+        E //= nm
+    mt = max(-(-m_tokens // nd), 1)
+    top_k = int(getattr(cfg, "experts_per_token", 0)) or 1
+    # shard_round=True: the model layer stack serves with the 256-rounded
+    # shardable capacity, and the grouped plan-cache keys embed C
+    C = moe_capacity(mt, top_k, E, float(getattr(cfg, "capacity_factor", 1.25)),
+                     shard_round=True)
+    out: list[tuple[int, int, int, int]] = []
+    for s in specs:
+        g = s.group if isinstance(s.group, int) else E
+        shape = (g, C, s.k, s.n)
+        if shape not in out:
+            out.append(shape)
+    return out
+
+
+def warm_shapes(workload: str = "deepseek_r1") -> list[tuple[int, int, int]]:
+    """(M, K, N) grid the tune CLI warms the plan cache with.
+
+    ``workload`` is any name ``contraction_set`` accepts — a paper workload
+    or a registry arch id; the dense projection pairs come from the
+    registry, swept over the WARM_TOKENS grid plus square operator sizes.
+    """
+    pairs = [(s.k, s.n) for s in contraction_set(workload) if s.kind == "dense"
+             and isinstance(s.k, int) and isinstance(s.n, int)]
+    out = [(m, k, n) for m in WARM_TOKENS for k, n in pairs]
+    out += [(s, s, s) for s in WARM_SQUARE]
+    return out
+
+
+def shape_token(plan_key: str) -> str:
+    """Extract the shape token (``MxKxN`` / ``gGxMxKxN|sb=b``) of a plan key.
+
+    Mirrors ``core.plan_cache.plan_key``'s layout: part 2 is the shape;
+    grouped shapes carry their ``sb=`` flag as the following part.
+    """
+    parts = plan_key.split("|")
+    tok = parts[2]
+    if tok.startswith("g") and len(parts) > 3 and parts[3].startswith("sb="):
+        tok += "|" + parts[3]
+    return tok
+
+
+# Back-compat alias for the paper projection tables; prefer
+# ``paper_projection_shapes(name)`` / ``contraction_set(name)``.
+LLM_SHAPES = _PAPER_PROJECTIONS

@@ -143,8 +143,13 @@ def _embed_tokens(params, cfg: ModelConfig, tokens, patch_embeds=None):
 
 
 def _layer_body(x, lp, window, cfg: ModelConfig, positions, theta,
-                cache_layer=None, cache_index=None):
-    """One decoder layer. Returns (x, new_cache_layer, aux)."""
+                cache_layer=None, cache_index=None, length_mask=None):
+    """One decoder layer. Returns (x, new_cache_layer, aux).
+
+    ``length_mask`` (B, S) marks real (1) vs right-pad (0) positions; SSD
+    mixers zero dt on pad so the recurrent state ignores the padded tail
+    (attention is already exact under causal masking + decode validity).
+    """
     dims = None if cfg.family == "ssm" else L.AttnDims(
         cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim)
     aux = jnp.zeros((), jnp.float32)
@@ -156,7 +161,7 @@ def _layer_body(x, lp, window, cfg: ModelConfig, positions, theta,
     if cfg.family == "ssm":
         st = None if cache_layer is None else cache_layer.get("state")
         y, new_state = SSD.ssd_apply(lp["ssm"], h, cfg, state=st,
-                                     decode=is_decode)
+                                     decode=is_decode, length_mask=length_mask)
         if cache_layer is not None:
             new_cache["state"] = new_state
         return x + y, new_cache, aux
@@ -166,7 +171,8 @@ def _layer_body(x, lp, window, cfg: ModelConfig, positions, theta,
                                   cache=kv, cache_index=cache_index)
         st = None if cache_layer is None else cache_layer.get("state")
         ys, new_state = SSD.ssd_apply(lp["ssm"], h, cfg, state=st,
-                                      decode=is_decode)
+                                      decode=is_decode,
+                                      length_mask=length_mask)
         y = 0.5 * (L.rmsnorm(ya, lp["attn_norm"], cfg.norm_eps)
                    + L.rmsnorm(ys, lp["ssm_norm"], cfg.norm_eps))
         x = x + y
@@ -203,12 +209,14 @@ def _layer_body(x, lp, window, cfg: ModelConfig, positions, theta,
 
 def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
             cache=None, cache_index=None, fcfg: FalconConfig | None = None,
-            logits_mode: str = "none"):
+            logits_mode: str = "none", length_mask=None):
     """Run the decoder stack.
 
     logits_mode: "none" (return hidden), "last" (logits of final position),
     "all" (full logits — small vocab / smoke only; training uses
     ``lm_loss`` with chunked cross-entropy instead).
+    ``length_mask`` (B, S): 1 on real positions, 0 on right pad — makes
+    bucketed (right-padded) prefill exact for SSM/hybrid recurrent state.
     Returns (out, new_cache, aux_loss).
 
     FalconGEMM policy resolves from the ambient context (``falcon.use``),
@@ -218,11 +226,12 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
     with engine.config_scope(fcfg, "forward", lambda: falcon_config_for(cfg)):
         return _forward(params, cfg, tokens, patch_embeds=patch_embeds,
                         cache=cache, cache_index=cache_index,
-                        logits_mode=logits_mode)
+                        logits_mode=logits_mode, length_mask=length_mask)
 
 
 def _forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
-             cache=None, cache_index=None, logits_mode: str = "none"):
+             cache=None, cache_index=None, logits_mode: str = "none",
+             length_mask=None):
     x = shard_act(_embed_tokens(params, cfg, tokens, patch_embeds),
                   BATCH, None, None)
     B, S = x.shape[0], x.shape[1]
@@ -246,7 +255,8 @@ def _forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
         else:
             lp, w, cl = xs
         fn = lambda x_: _layer_body(x_, lp, w, cfg, positions, theta,
-                                    cache_layer=cl, cache_index=cache_index)
+                                    cache_layer=cl, cache_index=cache_index,
+                                    length_mask=length_mask)
         if cfg.remat and cache is None:
             if cfg.remat_policy == "dots":
                 # selective: keep matmul outputs, recompute elementwise ops —

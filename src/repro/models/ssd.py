@@ -1,10 +1,15 @@
 """Mamba-2 SSD (state-space duality) mixer — chunked scan + decode recurrence.
 
 Implements the SSD algorithm of Dao & Gu (2024): within-chunk quadratic
-attention-like form + inter-chunk state recurrence, all in einsums so the MXU
-does the heavy lifting. The in/out projections are FalconGEMM-backed (the
-paper's technique applies to the GEMMs around the scan; the scan itself is
-not a GEMM — noted in DESIGN.md §Arch-applicability).
+attention-like form + inter-chunk state recurrence. The in/out projections
+are FalconGEMM-backed, and the chunk contractions themselves route through
+``falcon.einsum`` — scores, diagonal-block output, chunk-end states and the
+carried-state contribution are each ONE 2-operand grouped contraction over
+``B * n_chunks * H`` (decay factors are folded into an operand elementwise
+first), so the Decision Module prices the SSD scan like it prices attention.
+The decode recurrence routes its two per-step contractions the same way.
+Registry entries: ``kind="ssd_scan"`` / ``"ssd_decode"`` in
+``core.workloads.contraction_set``.
 
 Shapes: x (B, L, H, P) values; dt (B, L, H) step sizes; A (H,) decay rates;
 B_, C_ (B, L, G, N) input/output projections with H % G == 0.
@@ -14,8 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import repro.api as falcon
 from repro.core import engine
-from repro.core.falcon_gemm import FalconConfig, falcon_dense
 from repro.parallel.sharding import BATCH, shard_act
 from .layers import dense_init
 
@@ -60,22 +65,23 @@ def ssd_scan(x, dt, A, B_, C_, chunk: int, init_state=None):
 
     xc, ac = r(xdt, 3), r(a, 3)
     Bc, Cc = r(B_, 4), r(C_, 4)
-    Bh = jnp.repeat(Bc, rep, axis=3)  # (B, nc, c, H, N)
-    Ch = jnp.repeat(Cc, rep, axis=3)
+    Bh = jnp.repeat(Bc, rep, axis=3).astype(jnp.float32)  # (B, nc, c, H, N)
+    Ch = jnp.repeat(Cc, rep, axis=3).astype(jnp.float32)
+    xc = xc.astype(jnp.float32)
 
     ac_t = ac.transpose(0, 1, 3, 2)              # (B, nc, H, c)
     Lmat = jnp.exp(_segsum(ac_t))                # (B, nc, H, c, c)
-    # intra-chunk (diagonal block) output
-    scores = jnp.einsum("bnihs,bnjhs->bnhij", Ch.astype(jnp.float32),
-                        Bh.astype(jnp.float32))  # (B, nc, H, c, c)
-    y_diag = jnp.einsum("bnhij,bnhij,bnjhp->bnihp", scores, Lmat,
-                        xc.astype(jnp.float32))
+    # intra-chunk (diagonal block) output: each einsum below is a planned
+    # grouped contraction over B*nc*H (registry kind "ssd_scan")
+    scores = falcon.einsum("bnihs,bnjhs->bnhij", Ch, Bh)  # (B, nc, H, c, c)
+    y_diag = falcon.einsum("bnhij,bnjhp->bnihp", scores * Lmat, xc)
 
-    # chunk-end states: decay from position j to the end of its chunk
+    # chunk-end states: decay from position j to the end of its chunk,
+    # folded into B elementwise so states is one 2-operand contraction
     decay_to_end = jnp.exp(jnp.sum(ac_t, -1, keepdims=True) - jnp.cumsum(ac_t, -1))
+    Bw = Bh * decay_to_end.transpose(0, 1, 3, 2)[..., None]   # (B, nc, c, H, N)
     # states[n] = sum_j decay_to_end[j] * B[j] x[j]   -> (B, nc, H, N, P)
-    states = jnp.einsum("bnhj,bnjhs,bnjhp->bnhsp", decay_to_end,
-                        Bh.astype(jnp.float32), xc.astype(jnp.float32))
+    states = falcon.einsum("bnjhs,bnjhp->bnhsp", Bw, xc)
 
     # inter-chunk recurrence over chunk index
     chunk_decay = jnp.exp(jnp.sum(ac_t, axis=-1))  # (B, nc, H)
@@ -91,10 +97,11 @@ def ssd_scan(x, dt, A, B_, C_, chunk: int, init_state=None):
         body, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
     prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B, nc, H, N, P)
 
-    # contribution of the carried-in state to each position
+    # contribution of the carried-in state to each position: fold the
+    # from-chunk-start decay into C elementwise, then one contraction
     decay_from_start = jnp.exp(jnp.cumsum(ac_t, -1))    # (B, nc, H, c)
-    y_off = jnp.einsum("bnihs,bnhsp,bnhi->bnihp", Ch.astype(jnp.float32),
-                       prev_states, decay_from_start)
+    Cw = Ch * decay_from_start.transpose(0, 1, 3, 2)[..., None]
+    y_off = falcon.einsum("bnihs,bnhsp->bnihp", Cw, prev_states)
 
     y = (y_diag + y_off).reshape(Bb, Lp, H, Pd)[:, :L].astype(x.dtype)
     return y, s_final.astype(x.dtype)
@@ -105,12 +112,14 @@ def ssd_decode_step(x, dt, A, B_, C_, state):
     a = jnp.exp(dt[:, 0] * (-jnp.exp(A))[None, :])        # (B, H)
     G = B_.shape[2]
     rep = x.shape[2] // G
-    Bh = jnp.repeat(B_[:, 0], rep, axis=1)                # (B, H, N)
-    Ch = jnp.repeat(C_[:, 0], rep, axis=1)
+    Bh = jnp.repeat(B_[:, 0], rep, axis=1).astype(jnp.float32)  # (B, H, N)
+    Ch = jnp.repeat(C_[:, 0], rep, axis=1).astype(jnp.float32)
     xdt = (x[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)
+    # the state update (outer product) and readout are planned grouped
+    # contractions over B*H (registry kind "ssd_decode")
     new_state = (state.astype(jnp.float32) * a[..., None, None]
-                 + jnp.einsum("bhs,bhp->bhsp", Bh.astype(jnp.float32), xdt))
-    y = jnp.einsum("bhs,bhsp->bhp", Ch.astype(jnp.float32), new_state)
+                 + falcon.einsum("bhs,bhp->bhsp", Bh, xdt))
+    y = falcon.einsum("bhs,bhsp->bhp", Ch, new_state)
     return y[:, None].astype(x.dtype), new_state.astype(x.dtype)
 
 
@@ -129,21 +138,27 @@ def ssd_init(key, d_model: int, ssm_state: int, n_heads: int, head_dim: int,
     }
 
 
-def ssd_apply(p: dict, x: jnp.ndarray, cfg, fcfg: FalconConfig | None = None,
-              state=None, decode: bool = False):
+def ssd_apply(p: dict, x: jnp.ndarray, cfg,
+              fcfg: falcon.FalconConfig | None = None,
+              state=None, decode: bool = False, length_mask=None):
     """x: (B, L, d_model) -> (y, new_state).
 
     Dispatch policy comes from the context config; ``fcfg`` is a deprecated
-    per-call override.
+    per-call override. ``length_mask`` (B, L) zeroes dt on padded positions
+    (dt=0 => decay 1, no state contribution — the same trick the chunked
+    scan uses for its tail padding), so right-padded serve prefill produces
+    the exact unpadded final state.
     """
     with engine.deprecated_fcfg(fcfg, "ssd_apply"):
-        return _ssd_apply(p, x, cfg, state=state, decode=decode)
+        return _ssd_apply(p, x, cfg, state=state, decode=decode,
+                          length_mask=length_mask)
 
 
-def _ssd_apply(p: dict, x: jnp.ndarray, cfg, state=None, decode: bool = False):
+def _ssd_apply(p: dict, x: jnp.ndarray, cfg, state=None, decode: bool = False,
+               length_mask=None):
     B, L, _ = x.shape
     H, Pd, G, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
-    proj = falcon_dense(x, p["ssm_in"])
+    proj = falcon.dense(x, p["ssm_in"])
     d_inner = H * Pd
     z = shard_act(proj[..., :d_inner], BATCH, None, "model")   # gate branch
     off = d_inner
@@ -156,6 +171,8 @@ def _ssd_apply(p: dict, x: jnp.ndarray, cfg, state=None, decode: bool = False):
     off += G * N
     dt = jax.nn.softplus(proj[..., off:].astype(jnp.float32)
                          + p["ssm_dt_bias"][None, None])       # (B, L, H)
+    if length_mask is not None:
+        dt = dt * length_mask.astype(jnp.float32)[..., None]
     if decode:
         y, new_state = ssd_decode_step(xs, dt, p["ssm_A"], B_, C_, state)
     else:
@@ -163,5 +180,5 @@ def _ssd_apply(p: dict, x: jnp.ndarray, cfg, state=None, decode: bool = False):
                                 init_state=state)
     y = y + xs * p["ssm_D"][None, None, :, None].astype(x.dtype)
     y = y.reshape(B, L, d_inner) * jax.nn.silu(z)  # mamba2 output gate
-    y = falcon_dense(y, p["ssm_out"])
+    y = falcon.dense(y, p["ssm_out"])
     return shard_act(y, BATCH, None, None), new_state

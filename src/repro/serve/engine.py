@@ -52,10 +52,14 @@ class ServeEngine:
     """Continuous-batching serve engine for one model.
 
     ``submit`` is thread-safe (any frontend thread); ``step``/``run`` are the
-    single consumer. Families whose state a padded prefill would corrupt
-    (SSM/hybrid recurrent state, MoE capacity contention) and non-token
-    frontends are rejected — the bucket math is only exact for dense
-    KV-cache attention.
+    single consumer. All decoder families serve: dense/hybrid KV-cache
+    attention is exact under causal masking + decode validity, and SSM/hybrid
+    recurrent state is exact because the serve prefill step zeroes dt on
+    right-pad positions (see ``make_serve_prefill_step``). MoE routing is
+    approximate under padding (pad rows contend for expert capacity) but
+    pad rows are sliced off before the slot cache update. Non-token
+    frontends (audio codebooks, vision patches) are rejected — the bucket
+    grid assumes one int token stream.
 
     ``mesh_shape={"data": d, "model": m}`` spanning more than one device
     lifts the engine onto a real mesh: weights shard tensor-parallel by the
@@ -73,11 +77,11 @@ class ServeEngine:
                  precombine: bool = True, record_logits: bool = False,
                  seed: int = 0, mesh_shape: dict | None = None,
                  quantize: bool = False):
-        if model_cfg.family != "dense" or model_cfg.frontend:
+        if model_cfg.frontend:
             raise NotImplementedError(
-                f"ServeEngine supports dense token models; got "
-                f"family={model_cfg.family!r} frontend={model_cfg.frontend!r} "
-                "(padded prefill corrupts SSM state / MoE routing capacity)")
+                f"ServeEngine serves token-stream decoders; got "
+                f"frontend={model_cfg.frontend!r} (bucketed prefill assumes "
+                "one int token stream)")
         self.cfg = model_cfg
         self.policy = policy or BucketPolicy.build(max_prompt_len, max_slots)
         self.max_slots = max_slots
@@ -177,17 +181,22 @@ class ServeEngine:
         """Pre-plan + pre-compile the whole bucket grid.
 
         1. ``core.engine.warm_buckets`` runs the Decision Module for every
-           (bucket M) x (projection shape) so serve-time traces only hit the
-           plan cache — including from concurrent engines sharing a warmed
-           cache file.
+           contraction the workload registry enumerates at every (batch, seq)
+           bucket of the grid — dense projections, grouped MoE expert FFNs,
+           attention and SSD scan/decode contractions — so serve-time traces
+           only hit the plan cache, including from concurrent engines sharing
+           a warmed cache file.
         2. Each (phase, shape) step function is traced and compiled once on
            zero inputs, so no live request ever pays a compile.
         """
         t0 = time.perf_counter()
+        grid = (list(self.policy.prefill_shapes())
+                + [(b, 1) for b in self.policy.decode_batch])
         with falcon.use(self.fcfg), self._mesh_ctx():
             n_plans = core_engine.warm_buckets(
-                self.fcfg, self.cfg, self.policy.bucket_ms(),
-                dtype=str(self.cfg.dtype), mesh_shape=self.mesh_shape)
+                self.fcfg, self.cfg, grid,
+                dtype=str(self.cfg.dtype), mesh_shape=self.mesh_shape,
+                kv_len=self.max_len)
             for (b, s) in self.policy.prefill_shapes():
                 jax.block_until_ready(self._prefill_fn(
                     self.params, jnp.zeros((b, s), jnp.int32),

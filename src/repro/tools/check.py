@@ -13,6 +13,11 @@ non-zero iff any pass reports an *error* (warnings and info pass):
   * ``plan-lint``    — ``kernels/tuning.block_plans`` output for each
     candidate scheme on the probe shapes, checked against the hardware
     profile (divisibility, grid bounds, VMEM vs the profile's ``vmem_bytes``);
+    ``--workload <arch>`` runs the same lint over an architecture's FULL
+    contraction set as enumerated by the workload registry
+    (``core.workloads.contraction_set``) — every projection, expert FFN,
+    attention and SSD contraction the model will plan, without launching a
+    single kernel;
   * ``codegen-lint`` — the Deployment Module's generated source re-derived
     at the AST level against the scheme's coefficient tensors;
   * ``cache-audit``  — invariants of a persisted plan-cache JSON
@@ -112,6 +117,16 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--plans", action="store_true",
                     help="lint candidate schemes' block plans on the probe "
                          "shapes against --hardware")
+    ap.add_argument("--workload", action="append", default=[],
+                    metavar="ARCH",
+                    help="lint the full registry contraction set of an "
+                         "architecture (configs.registry id or paper "
+                         "workload name) against --hardware (repeatable; "
+                         "--all lints every registry arch)")
+    ap.add_argument("--workload-batch", type=int, default=8,
+                    help="batch for --workload shape resolution (default 8)")
+    ap.add_argument("--workload-seq", type=int, default=512,
+                    help="seq for --workload shape resolution (default 512)")
     ap.add_argument("--quant-plans", action="store_true",
                     help="lint the int8-quantized pipeline each candidate "
                          "would run on the probe shapes: backend legality, "
@@ -153,10 +168,10 @@ def main(argv: list[str] | None = None) -> int:
 
     if not any((args.all, args.library, args.plans, args.quant_plans,
                 args.codegen, args.cache, args.plan_file, args.scheme,
-                args.scheme_file, args.quant_accum)):
+                args.scheme_file, args.quant_accum, args.workload)):
         ap.error("nothing to check: pass --all or a specific pass "
-                 "(--library/--plans/--quant-plans/--codegen/--cache/"
-                 "--plan-file/--scheme/--scheme-file/--quant-accum)")
+                 "(--library/--plans/--quant-plans/--workload/--codegen/"
+                 "--cache/--plan-file/--scheme/--scheme-file/--quant-accum)")
 
     # Heavy imports after arg parsing so `--help` stays instant.
     from repro import analysis
@@ -185,6 +200,20 @@ def main(argv: list[str] | None = None) -> int:
         for l in algorithms.candidates():
             findings.extend(analysis.lint_quant_plans(
                 l, shapes, hw, backend=args.backend))
+
+    workloads = list(args.workload)
+    if args.all and not workloads:
+        from repro.configs import registry
+        workloads = registry.list_archs()
+    for arch in workloads:
+        try:
+            findings.extend(analysis.lint_workload(
+                arch, hw, batch=args.workload_batch, seq=args.workload_seq,
+                dtype=args.dtype, backend=args.backend))
+        except (KeyError, ModuleNotFoundError) as e:
+            print(f"falcon-check: unknown workload {arch!r}: {e}",
+                  file=sys.stderr)
+            return 2
 
     if args.all:
         _roundtrip_cache_audit(hw, "bfloat16", findings)

@@ -11,9 +11,12 @@ does three things:
      ``~/.cache/falcon_gemm/profiles/<name>.json``, override with
      ``FALCON_PROFILE_DIR`` or ``--out``) together with probe measurements
      and per-scheme Pallas block plans as metadata;
-  3. warms the plan cache for a grid of serving shapes under the calibrated
-     profile and persists it next to the profile, so a serving process
-     (``repro.launch.serve --plan-cache ...``) starts with zero cold misses.
+  3. warms the plan cache for a grid of serving shapes — derived from the
+     workload registry (``core.workloads.warm_shapes``, projection pairs of
+     ``--warm-workload``'s contraction set x token buckets) — under the
+     calibrated profile and persists it next to the profile, so a serving
+     process (``repro.launch.serve --plan-cache ...``) starts with zero
+     cold misses.
 
 ``--train`` extends both steps to the backward pass: probe shapes gain their
 transposed (dA/dB) variants and the warm grid covers full fwd+bwd shape
@@ -60,6 +63,11 @@ def main(argv: list[str] | None = None) -> int:
                     help="skip plan-cache warmup")
     ap.add_argument("--warm-dtype", default="bfloat16",
                     help="dtype for plan-cache warmup decisions")
+    ap.add_argument("--warm-workload", default="deepseek_r1",
+                    help="workload whose registry contraction set seeds the "
+                         "warm grid: a paper workload (deepseek_r1/qwen3_5/"
+                         "hunyuan_video) or a configs.registry arch id "
+                         "(default: deepseek_r1)")
     ap.add_argument("--quant", action="store_true",
                     help="probe the int8 stage too (raw int8 GEMM + fused "
                          "Combine-A+quantize) and persist the measured "
@@ -152,7 +160,7 @@ def main(argv: list[str] | None = None) -> int:
         cache = plan_cache.configure(path=cache_path, autoload=False)
         cfg = FalconConfig(hardware=prof.name)
         n_lcma = 0
-        shapes = warm_shapes()
+        shapes = warm_shapes(args.warm_workload)
         if args.quick:
             shapes = shapes[:8]
         for (m, k, n) in shapes:

@@ -28,8 +28,10 @@ __all__ = ["make_train_step", "make_eval_step", "make_prefill_step",
 
 
 def warm_train(cfg: ModelConfig, batch: int, seq: int) -> int:
-    """Pre-plan the forward AND backward shapes of every projection in
-    ``cfg`` at M = batch x seq tokens.
+    """Pre-plan the forward AND backward shapes of every contraction in
+    ``cfg`` at (batch, seq) — dense projections, grouped MoE expert FFNs,
+    attention score/value contractions and SSD chunk contractions, all
+    enumerated by the workload registry (``core.workloads.contraction_set``).
 
     Run once before jitting a train step: tracing then resolves every
     Decision-Module query — the forward contractions and the custom-VJP
@@ -38,7 +40,7 @@ def warm_train(cfg: ModelConfig, batch: int, seq: int) -> int:
     of ``plan()`` calls issued.
     """
     fc = engine.active_config() or M.falcon_config_for(cfg)
-    return engine.warm_buckets(fc, cfg, [batch * seq],
+    return engine.warm_buckets(fc, cfg, [(batch, seq)],
                                dtype=str(cfg.dtype), train=True)
 
 
@@ -131,6 +133,8 @@ def make_serve_prefill_step(cfg: ModelConfig, max_len: int, fcfg=None):
     the bucket length, so "last token" differs per row: ``last_index`` (B,)
     selects each request's true final prompt position before the LM head
     runs (on (B, 1, d) — the padded tail never reaches the vocab matmul).
+    A per-row length mask derived from ``last_index`` makes SSM/hybrid
+    recurrent state exact under the right padding (dt=0 on pad positions).
     Returns (logits (B, 1, V), cache) with the cache sized to ``max_len`` so
     its rows slot directly into the engine's slot cache.
     """
@@ -139,10 +143,13 @@ def make_serve_prefill_step(cfg: ModelConfig, max_len: int, fcfg=None):
 
     def prefill_step(params, tokens, last_index):
         with engine.maybe_use(fcfg):
-            B = tokens.shape[0]
+            B, S = tokens.shape[0], tokens.shape[1]
             cache = M.init_cache(cfg, B, max_len)
+            mask = (jnp.arange(S)[None, :]
+                    <= last_index[:, None]).astype(jnp.float32)
             hidden, cache, _ = M.forward(params, cfg, tokens, cache=cache,
-                                         cache_index=0, logits_mode="none")
+                                         cache_index=0, logits_mode="none",
+                                         length_mask=mask)
             h_last = jnp.take_along_axis(
                 hidden, last_index[:, None, None].astype(jnp.int32), axis=1)
             logits = M.compute_logits(params, cfg, h_last)

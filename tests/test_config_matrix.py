@@ -1,4 +1,4 @@
-"""Per-config smoke matrix: falcon.dot_general fwd+bwd for every registry arch.
+"""Per-config smoke matrix: every registry arch vs the workload registry.
 
 "Works on granite" must not stand in for "works": every architecture in
 ``configs/registry.py`` (mamba2/SSD, MoE, pixtral, musicgen, kimi_k2, ...)
@@ -6,6 +6,11 @@ contributes its own projection shapes — attention/MLP/SSM/vocab, plus the
 grouped MoE expert shapes — and each is pushed through the planned
 ``falcon.dot_general`` forward AND backward at a tiny M, with the scheme
 forced so the LCMA path (not the GEMM fallback) is what gets exercised.
+
+The registry-coverage test is the contract the warm surfaces rely on:
+``contraction_set`` must enumerate every plan-cache key a full fwd+bwd
+trace of the model actually creates — an unwarmable contraction escaping
+the registry is a bug here before it is a serve-time cold miss.
 """
 import jax
 import jax.numpy as jnp
@@ -14,7 +19,9 @@ import pytest
 
 import repro.api as falcon
 from repro.configs import registry
-from repro.core import engine as core_engine
+from repro.core import plan_cache, workloads
+from repro.models import model as M
+from repro.models import ssd as SSD
 
 # Forced strassen + jnp backend: tiny shapes would otherwise always take the
 # plain-GEMM fallback and the matrix would prove nothing about the combines.
@@ -24,7 +31,7 @@ DN = (((1,), (0,)), ((), ()))          # (M, K) @ (K, N)
 
 def _shapes_for(cfg, cap: int = 256):
     """A few representative (K, N) projections, dims capped for CPU speed."""
-    shapes = core_engine.projection_shapes(cfg)
+    shapes = falcon.dense_projection_shapes(cfg)
     return [(min(k, cap), min(n, cap)) for (k, n) in shapes[:4]]
 
 
@@ -56,7 +63,7 @@ def test_dot_general_fwd_bwd_per_config(arch, rng):
 def test_grouped_expert_matmul_per_moe_config(arch, rng):
     """MoE archs additionally smoke their grouped E x (C, K) @ (K, N) path."""
     cfg = registry.smoke_config(arch)
-    (E, C, K, N) = core_engine.grouped_expert_shapes(cfg, m_tokens=16)[0]
+    (E, C, K, N) = falcon.grouped_moe_shapes(cfg, 16)[0]
     E, C, K, N = min(E, 4), min(C, 16), min(K, 128), min(N, 128)
     x = jnp.asarray(rng.standard_normal((E, C, K)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((E, K, N)) * 0.1, jnp.float32)
@@ -68,3 +75,148 @@ def test_grouped_expert_matmul_per_moe_config(arch, rng):
     g0 = jax.grad(lambda a: jnp.sum(jnp.einsum("eck,ekn->ecn", a, w) ** 2))(x)
     np.testing.assert_allclose(np.asarray(g), np.asarray(g0),
                                atol=5e-2, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Workload-registry coverage: no plan-cache key escapes contraction_set
+# ---------------------------------------------------------------------------
+
+def _smoke_batch(cfg, rng, B=2, S=16):
+    if cfg.frontend == "audio_codebooks":
+        toks = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S, cfg.num_codebooks)),
+            jnp.int32)
+        return {"tokens": toks, "labels": toks}
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.frontend == "vision_patches":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.num_patches, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", registry.list_archs())
+def test_registry_covers_traced_plan_keys(arch, rng):
+    """contraction_set covers every plan-cache key a fwd+bwd trace creates.
+
+    This is the registry's core contract: every shape the Decision Module is
+    asked to plan during a real train trace must be enumerable from the
+    config alone — otherwise warm surfaces (warm_buckets / warm_train /
+    ServeEngine.warm / tools.tune) could never guarantee a hot cache.
+    """
+    cfg = registry.smoke_config(arch)
+    B, S = 2, 16
+    plan_cache.reset()
+    try:
+        batch = _smoke_batch(cfg, rng, B, S)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        with falcon.use(falcon.FalconConfig(hardware="tpu_v5e",
+                                            use_plan_cache=True)):
+            jax.grad(lambda p: M.lm_loss(p, cfg, batch)[0])(params)
+        traced = {workloads.shape_token(k)
+                  for k in plan_cache.default_cache().keys()}
+        allowed = {c.key_shape()
+                   for c in falcon.resolve_contractions(cfg, B, S, train=True)}
+        assert traced, f"{arch}: trace created no plan-cache keys"
+        extra = traced - allowed
+        assert not extra, (
+            f"{arch}: traced contractions missing from the registry: "
+            f"{sorted(extra)}")
+        if cfg.family in ("ssm", "hybrid"):
+            # the SSD chunk contractions are Decision-routed: grouped keys
+            # (gGxMxKxN) from the scan must show up in the trace
+            assert any(t.startswith("g") for t in traced), (
+                f"{arch}: no grouped SSD contraction was planned")
+    finally:
+        plan_cache.reset()
+
+
+# ---------------------------------------------------------------------------
+# SSD: falcon-routed chunk contractions vs the plain-einsum reference
+# ---------------------------------------------------------------------------
+
+def _ssd_scan_einsum_reference(x, dt, A, B_, C_, chunk, init_state=None):
+    """The original 3-operand jnp.einsum SSD formulation (pre falcon routing)."""
+    Bb, L, H, Pd = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Lp = -(-L // chunk) * chunk
+    nc = Lp // chunk
+    xdt = x * dt[..., None]
+    a = (dt * (-jnp.exp(A))[None, None, :]).astype(jnp.float32)
+
+    def r(t):
+        return t.reshape((Bb, nc, chunk) + t.shape[2:])
+
+    xc, ac = r(xdt).astype(jnp.float32), r(a)
+    Bh = jnp.repeat(r(B_), rep, axis=3).astype(jnp.float32)
+    Ch = jnp.repeat(r(C_), rep, axis=3).astype(jnp.float32)
+    ac_t = ac.transpose(0, 1, 3, 2)
+    Lmat = jnp.exp(SSD._segsum(ac_t))
+    scores = jnp.einsum("bnihs,bnjhs->bnhij", Ch, Bh)
+    y_diag = jnp.einsum("bnhij,bnhij,bnjhp->bnihp", scores, Lmat, xc)
+    decay_to_end = jnp.exp(jnp.sum(ac_t, -1, keepdims=True)
+                           - jnp.cumsum(ac_t, -1))
+    states = jnp.einsum("bnhj,bnjhs,bnjhp->bnhsp", decay_to_end, Bh, xc)
+    chunk_decay = jnp.exp(jnp.sum(ac_t, axis=-1))
+    s0 = (jnp.zeros((Bb, H, N, Pd), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(s, inp):
+        st, dk = inp
+        return s * dk[..., None, None] + st, s
+
+    s_final, prev = jax.lax.scan(
+        body, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)
+    dfs = jnp.exp(jnp.cumsum(ac_t, -1))
+    y_off = jnp.einsum("bnihs,bnhsp,bnhi->bnihp", Ch, prev, dfs)
+    y = (y_diag + y_off).reshape(Bb, Lp, H, Pd)[:, :L].astype(x.dtype)
+    return y, s_final.astype(x.dtype)
+
+
+def _ssd_inputs(rng, B=2, L=24, H=4, P=16, G=2, N=16):
+    x = jnp.asarray(rng.standard_normal((B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, L, H))) * 0.1, jnp.float32)
+    A = jnp.asarray(np.abs(rng.standard_normal((H,))) * 0.5, jnp.float32)
+    B_ = jnp.asarray(rng.standard_normal((B, L, G, N)), jnp.float32)
+    C_ = jnp.asarray(rng.standard_normal((B, L, G, N)), jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((B, H, N, P)), jnp.float32)
+    return x, dt, A, B_, C_, s0
+
+
+def test_ssd_scan_falcon_routed_matches_einsum_reference(rng):
+    """The decomposed 2-operand falcon.einsum scan == the 3-operand original,
+    with the LCMA scheme FORCED so the combines (not a GEMM fallback) run."""
+    x, dt, A, B_, C_, s0 = _ssd_inputs(rng)
+    with falcon.use(FCFG):
+        y, sf = SSD.ssd_scan(x, dt, A, B_, C_, chunk=8, init_state=s0)
+    y_ref, s_ref = _ssd_scan_einsum_reference(x, dt, A, B_, C_, 8,
+                                              init_state=s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(s_ref),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_ssd_decode_step_falcon_routed_matches_reference(rng):
+    """Decode recurrence (outer-product state update + readout) through
+    falcon.einsum == the plain jnp formulation."""
+    x, dt, A, B_, C_, s0 = _ssd_inputs(rng)
+    xd, dtd, Bd, Cd = x[:, :1], dt[:, :1], B_[:, :1], C_[:, :1]
+    with falcon.use(FCFG):
+        y, ns = SSD.ssd_decode_step(xd, dtd, A, Bd, Cd, s0)
+    H, G = x.shape[2], B_.shape[2]
+    a = jnp.exp(dtd[:, 0] * (-jnp.exp(A))[None, :])
+    Bh = jnp.repeat(Bd[:, 0], H // G, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cd[:, 0], H // G, axis=1).astype(jnp.float32)
+    xdt = (xd[:, 0] * dtd[:, 0, :, None]).astype(jnp.float32)
+    ns_ref = (s0.astype(jnp.float32) * a[..., None, None]
+              + jnp.einsum("bhs,bhp->bhsp", Bh, xdt))
+    y_ref = jnp.einsum("bhs,bhsp->bhp", Ch, ns_ref)
+    np.testing.assert_allclose(np.asarray(y[:, 0]), np.asarray(y_ref),
+                               atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(ns), np.asarray(ns_ref),
+                               atol=2e-3, rtol=1e-3)

@@ -256,7 +256,7 @@ def test_warm_train_covers_the_whole_step():
         assert n > 0
         cache = plan_cache.default_cache()
         M = 2 * 16
-        for (K, N) in falcon.projection_shapes(cfg):
+        for (K, N) in falcon.dense_projection_shapes(cfg):
             for (Mb, Kb, Nb) in falcon.backward_shapes(M, K, N):
                 assert cache.has_shape(Mb, Kb, Nb), (K, N)
     finally:

@@ -479,7 +479,8 @@ def test_warm_buckets_covers_grouped_expert_shapes():
         dtype = "bfloat16"
 
     cfg = FalconConfig(hardware="tpu_v5e")
-    shapes = engine.grouped_expert_shapes(MoEArch(), 64)
+    with pytest.warns(DeprecationWarning, match="grouped_moe_shapes"):
+        shapes = engine.grouped_expert_shapes(MoEArch(), 64)
     assert shapes == [(4, 40, 64, 128), (4, 40, 128, 64)]
     n = engine.warm_buckets(cfg, MoEArch(), [64])
     cache = plan_cache.default_cache()

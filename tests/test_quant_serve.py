@@ -25,10 +25,9 @@ from repro.core.engine import PlannedWeight
 from repro.serve import ServeEngine, StepLoop
 
 # Widened smoke config: big enough for the quant tier to engage, small
-# enough for interpret-mode Pallas in CI.
-CFG = dataclasses.replace(
-    registry.smoke_config("granite_3_2b"),
-    d_model=256, d_ff=512, vocab_size=512, num_heads=4, num_kv_heads=4)
+# enough for interpret-mode Pallas in CI (shared with benchmarks/quant_serve
+# via the registry).
+CFG = registry.lcma_smoke_config("granite_3_2b")
 
 N_REQUESTS = 5
 # Relative logit-error ceiling for blockwise int8 weights at these dims;

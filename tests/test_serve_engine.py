@@ -223,11 +223,14 @@ def test_engine_bucket_hit_rate_after_warm(served):
     assert s["padding_waste"] < 0.9
 
 
-def test_engine_rejects_unsupported_family():
-    with pytest.raises(NotImplementedError):
-        ServeEngine(registry.smoke_config("mamba2_370m"))
+def test_engine_rejects_non_token_frontends():
+    """Non-token frontends stay rejected; decoder families (incl. SSM) serve."""
     with pytest.raises(NotImplementedError):
         ServeEngine(registry.smoke_config("pixtral_12b"))
+    with pytest.raises(NotImplementedError):
+        ServeEngine(registry.smoke_config("musicgen_large"))
+    ServeEngine(registry.smoke_config("mamba2_370m"),
+                max_slots=2, max_prompt_len=8, max_new_tokens=2)
 
 
 def test_engine_submit_validation():
@@ -247,7 +250,7 @@ def test_warm_buckets_preplans_grid():
     cfg = FalconConfig(hardware="tpu_v5e")
     buckets = [1, 2, 4, 64, 128]
     n = core_engine.warm_buckets(cfg, CFG, buckets, dtype="float32")
-    shapes = core_engine.projection_shapes(CFG)
+    shapes = falcon.dense_projection_shapes(CFG)
     assert n == 2 * len(buckets) * len(shapes)
     st0 = plan_cache.stats()
     assert st0.misses == n and st0.inserts == n
@@ -262,13 +265,93 @@ def test_warm_buckets_preplans_grid():
 
 
 def test_projection_shapes_cover_model_dims():
-    shapes = core_engine.projection_shapes(CFG)
+    shapes = falcon.dense_projection_shapes(CFG)
     d = CFG.d_model
     H, hd = CFG.num_heads, CFG.resolved_head_dim
     assert (d, H * hd) in shapes and (H * hd, d) in shapes
     assert (d, CFG.d_ff) in shapes and (CFG.d_ff, d) in shapes
     assert (d, -(-CFG.vocab_size // 256) * 256) in shapes
     assert len(shapes) == len(set(shapes))
+
+
+# ---------------------------------------------------------------------------
+# Registry-driven warm: 100% plan-key coverage of real serve runs
+# ---------------------------------------------------------------------------
+
+def _serve_32_requests(arch, seed=0):
+    """Warm an engine, then serve 32 ragged requests; return key sets."""
+    cfg = registry.smoke_config(arch)
+    plan_cache.reset()
+    engine = ServeEngine(cfg, max_slots=4, max_prompt_len=16,
+                         max_new_tokens=4, seed=seed)
+    engine.warm()
+    cache = plan_cache.default_cache()
+    keys_warm = set(cache.keys())
+    misses_warm = plan_cache.stats().misses
+    rng = np.random.default_rng(seed)
+    for plen in rng.integers(2, 16, size=32):
+        engine.submit(list(rng.integers(0, cfg.vocab_size, size=int(plen))),
+                      max_new_tokens=4)
+    done = engine.run()
+    assert len(done) == 32
+    return keys_warm, set(cache.keys()), misses_warm, plan_cache.stats().misses
+
+
+@pytest.mark.parametrize("arch", ["dbrx_132b", "mamba2_370m"])
+def test_warm_covers_all_serve_plan_keys(arch):
+    """ServeEngine.warm (via the workload registry) pre-plans EVERY key a
+    32-request serve run touches — MoE expert FFNs and SSD scan/decode
+    contractions included, not just dense projections."""
+    try:
+        keys_warm, keys_serve, misses_warm, misses_serve = \
+            _serve_32_requests(arch)
+        assert keys_serve == keys_warm, (
+            f"{arch}: serving created plan keys warm missed: "
+            f"{sorted(keys_serve - keys_warm)}")
+        assert misses_serve == misses_warm
+        if arch == "mamba2_370m":
+            # SSD contractions are Decision-routed: the warm set must hold
+            # grouped (gGxMxKxN) keys from the scan/decode registry entries
+            assert any("|g" in k for k in keys_warm)
+    finally:
+        plan_cache.reset()
+
+
+def test_mamba2_engine_output_allclose_vs_eager_decode():
+    """SSM serving is exact: right-padded bucketed prefill (dt zeroed on pad
+    via the length mask) + per-slot decode == per-request eager decode, at
+    off-bucket prompt lengths."""
+    cfg = registry.smoke_config("mamba2_370m")
+    plan_cache.reset()
+    try:
+        engine = ServeEngine(cfg, max_slots=4, max_prompt_len=16,
+                             max_new_tokens=4, seed=0)
+        engine.warm()
+        rng = np.random.default_rng(7)
+        prompts = [list(rng.integers(0, cfg.vocab_size, size=n))
+                   for n in (3, 11, 16, 5)]
+        reqs = [engine.submit(p, max_new_tokens=4) for p in prompts]
+        engine.run()
+        for req in reqs:
+            toks = jnp.asarray([req.prompt], jnp.int32)
+            cache = M.init_cache(cfg, 1, engine.max_len)
+            with falcon.use(engine.fcfg):
+                hidden, cache, _ = M.forward(engine.params, cfg, toks,
+                                             cache=cache, cache_index=0,
+                                             logits_mode="none")
+                logits = M.compute_logits(engine.params, cfg, hidden[:, -1:])
+                gen = [int(jnp.argmax(logits[0, -1]))]
+                pos = len(req.prompt)
+                for _ in range(3):
+                    logits, cache, _ = M.forward(
+                        engine.params, cfg,
+                        jnp.asarray([[gen[-1]]], jnp.int32), cache=cache,
+                        cache_index=pos, logits_mode="last")
+                    gen.append(int(jnp.argmax(logits[0, -1])))
+                    pos += 1
+            assert gen == req.generated, (len(req.prompt), gen, req.generated)
+    finally:
+        plan_cache.reset()
 
 
 # ---------------------------------------------------------------------------
