@@ -145,6 +145,19 @@ def to_metrics(results: dict) -> dict:
         m["serve.padding_waste"] = _metric(r["padding_waste"], "frac",
                                            higher_is_better=False)
         m["serve.plan_cache_hit_rate"] = _metric(r["plan_cache_hit_rate"], "frac")
+    for r in results.get("serve_latency") or []:
+        m["serve_latency.token_exact_frac"] = _metric(
+            r["token_exact"] / max(r["requests"], 1), "frac")
+        m["serve_latency.acceptance_rate"] = _metric(
+            r["acceptance_rate"], "frac")
+        m["serve_latency.prefix_hit_rate"] = _metric(
+            r["prefix_hit_rate"], "frac")
+        m["serve_latency.spec_decode_tok_s"] = _metric(
+            r["spec_decode_tok_s"], "tok/s")
+        m["serve_latency.ttft_p99_ms"] = _metric(
+            r["ttft_p99_ms"], "ms", higher_is_better=False)
+        m["serve_latency.tok_latency_p99_ms"] = _metric(
+            r["tok_latency_p99_ms"], "ms", higher_is_better=False)
     for r in results.get("quant_serve") or []:
         m["quant_serve.int8_gemm_gflops"] = _metric(
             r["int8_gemm_gflops"], "GFLOPS")

@@ -22,7 +22,7 @@ import traceback
 def _sections(quick: bool):
     from . import (distributed, e2e_llm, moe_grouped, operator_level,
                    plan_cache, precision, quant_serve, roofline_fig8,
-                   serve_bench, stepwise, train_bwd)
+                   serve_bench, serve_latency, stepwise, train_bwd)
 
     return [
         ("operator_level",
@@ -46,6 +46,11 @@ def _sections(quick: bool):
          lambda: serve_bench.run(requests=8 if quick else 16,
                                  max_prompt_len=16 if quick else 32,
                                  max_new_tokens=4 if quick else 8)),
+        ("serve_latency",
+         "Speculative + prefix-reuse serving under fixed-rate load "
+         "(TTFT, per-token p50/p99, acceptance, token-exactness)",
+         lambda: serve_latency.run(requests=12 if quick else 24,
+                                   max_new_tokens=4 if quick else 6)),
         ("quant_serve",
          "int8-quantized serving tier: tokens/s + prefix-matched logit "
          "error vs fp32",

@@ -1,0 +1,208 @@
+"""Latency under load: speculative + prefix-reuse serving vs the baseline.
+
+A fixed-arrival-rate load generator submits ragged requests from a frontend
+thread while the engine's step loop drains them, the way a deployment
+actually sees traffic (no convenient all-at-once batch). The same workload
+runs twice — plain engine, then speculation (γ self-draft) + radix prefix
+cache — and the report carries the serving SLO surface:
+
+* **TTFT** p50/p99 (submit → first emitted token) and **per-token latency**
+  p50/p99 (gaps between consecutive emitted tokens of one request);
+* **acceptance rate** and **prefix hit rate** of the tier-2 features;
+* **decode tokens/s** for both engines and their ratio (the speculation
+  speedup; ≈ 1 on CPU smoke shapes, > 1 when verify amortizes);
+* finished-request counts and the bucket/plan reuse counters.
+
+``--check`` self-gates the run: both engines must finish every request with
+**identical tokens** (speculation is worthless unless token-exact), accept
+at least one draft, and hit only warmed buckets. CI runs the 32-request
+smoke this way; ``python -m benchmarks.run`` embeds the same row in the
+machine-readable report gated against ``baseline_cpu.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+
+from repro.configs import registry
+from repro.core import plan_cache
+from repro.serve import ServeEngine
+
+
+def _percentiles(xs, ps=(50, 99)):
+    if not xs:
+        return {p: 0.0 for p in ps}
+    arr = np.asarray(xs, dtype=np.float64)
+    return {p: float(np.percentile(arr, p)) for p in ps}
+
+
+def _serve_under_load(engine: ServeEngine, prompts, max_new_tokens: int,
+                      arrival_rate: float, seed: int):
+    """Submit ``prompts`` at a fixed rate while stepping the engine.
+
+    Returns (finished requests in submit order, per-token emit timestamps
+    keyed by rid, wall seconds).
+    """
+    emits: dict[int, list[float]] = {}
+    reqs: list = []
+    budgets = np.random.default_rng(seed).integers(
+        1, max_new_tokens + 1, size=len(prompts))
+
+    def frontend():
+        t0 = time.perf_counter()
+        for i, p in enumerate(prompts):
+            # fixed arrival schedule: request i is due at t0 + i/rate
+            due = t0 + i / arrival_rate
+            now = time.perf_counter()
+            if due > now:
+                time.sleep(due - now)
+            r = engine.submit(
+                p, max_new_tokens=int(budgets[i]),
+                on_token=lambda rq, t: emits.setdefault(
+                    rq.rid, []).append(time.perf_counter()))
+            reqs.append(r)
+
+    th = threading.Thread(target=frontend)
+    t0 = time.perf_counter()
+    th.start()
+    # drain while the frontend is still injecting: idle just means the next
+    # arrival has not happened yet
+    while th.is_alive() or not engine.scheduler.idle:
+        if not engine.step():
+            time.sleep(0.0005)
+    th.join()
+    wall = time.perf_counter() - t0
+    return reqs, emits, wall
+
+
+def run(requests=32, arrival_rate=200.0, max_slots=4, max_prompt_len=16,
+        max_new_tokens=4, speculate=2, seed=0, verbose=True) -> list[dict]:
+    cfg = registry.smoke_config("granite_3_2b")
+    rng = np.random.default_rng(seed)
+    # ~25% duplicated prompts so the prefix cache has something to reuse
+    uniq = [list(rng.integers(0, cfg.vocab_size,
+                              int(rng.integers(2, max_prompt_len + 1))))
+            for _ in range(max(1, (3 * requests) // 4))]
+    prompts = [uniq[i % len(uniq)] for i in range(requests)]
+
+    def build(gamma):
+        plan_cache.reset()
+        eng = ServeEngine(cfg, max_slots=max_slots,
+                          max_prompt_len=max_prompt_len,
+                          max_new_tokens=max_new_tokens, seed=seed,
+                          speculate=gamma, prefix_cache=bool(gamma))
+        eng.warm()
+        return eng
+
+    base = build(0)
+    base_reqs, _, base_wall = _serve_under_load(
+        base, prompts, max_new_tokens, arrival_rate, seed)
+    spec = build(speculate)
+    spec_reqs, emits, spec_wall = _serve_under_load(
+        spec, prompts, max_new_tokens, arrival_rate, seed)
+
+    exact = sum(list(b.generated) == list(s.generated)
+                for b, s in zip(base_reqs, spec_reqs))
+    ttft = [(r.first_token_t - r.submit_t) * 1e3
+            for r in spec_reqs if r.first_token_t is not None]
+    gaps = [(b - a) * 1e3
+            for ts in emits.values() for a, b in zip(ts, ts[1:])]
+    ttft_p = _percentiles(ttft)
+    gap_p = _percentiles(gaps)
+    s, bs = spec.summary(), base.summary()
+    row = {
+        "requests": requests,
+        "arrival_rate": arrival_rate,
+        "speculate": speculate,
+        "finished_base": sum(r.done for r in base_reqs),
+        "finished_spec": sum(r.done for r in spec_reqs),
+        "token_exact": exact,
+        "ttft_p50_ms": round(ttft_p[50], 3),
+        "ttft_p99_ms": round(ttft_p[99], 3),
+        "tok_latency_p50_ms": round(gap_p[50], 3),
+        "tok_latency_p99_ms": round(gap_p[99], 3),
+        "acceptance_rate": s["acceptance_rate"],
+        "prefix_hit_rate": s["prefix_hit_rate"],
+        "base_decode_tok_s": bs["decode_tokens_per_s"],
+        "spec_decode_tok_s": s["decode_tokens_per_s"],
+        "spec_speedup": round(s["decode_tokens_per_s"]
+                              / max(bs["decode_tokens_per_s"], 1e-9), 3),
+        "bucket_misses": s["bucket_misses"] + bs["bucket_misses"],
+        "bucket_hit_rate": s["bucket_hit_rate"],
+        "base_wall_s": round(base_wall, 3),
+        "spec_wall_s": round(spec_wall, 3),
+    }
+    if verbose:
+        print(f"{requests} requests @ {arrival_rate:.0f}/s over "
+              f"{max_slots} slots, gamma={speculate}: "
+              f"{row['finished_spec']} finished, {exact}/{requests} "
+              f"token-exact vs baseline")
+        print(f"TTFT p50/p99: {row['ttft_p50_ms']:.1f}/"
+              f"{row['ttft_p99_ms']:.1f} ms | per-token p50/p99: "
+              f"{row['tok_latency_p50_ms']:.1f}/"
+              f"{row['tok_latency_p99_ms']:.1f} ms")
+        print(f"acceptance {row['acceptance_rate']:.1%} | prefix hits "
+              f"{row['prefix_hit_rate']:.1%} | decode tok/s "
+              f"{row['base_decode_tok_s']:.1f} -> "
+              f"{row['spec_decode_tok_s']:.1f} "
+              f"({row['spec_speedup']:.2f}x) | bucket misses "
+              f"{row['bucket_misses']}")
+    return [row]
+
+
+def check(row: dict) -> list[str]:
+    """The self-gate: what must hold for ANY speculative serve run."""
+    problems = []
+    if row["finished_spec"] != row["requests"]:
+        problems.append(f"finished {row['finished_spec']}/{row['requests']}")
+    if row["finished_base"] != row["requests"]:
+        problems.append(
+            f"baseline finished {row['finished_base']}/{row['requests']}")
+    if row["token_exact"] != row["requests"]:
+        problems.append(f"only {row['token_exact']}/{row['requests']} "
+                        "requests token-exact vs the baseline engine")
+    if not 0.0 < row["acceptance_rate"] <= 1.0:
+        problems.append(f"acceptance_rate {row['acceptance_rate']} not in "
+                        "(0, 1] — no draft ever survived verify")
+    if row["prefix_hit_rate"] <= 0.0:
+        problems.append("prefix cache never hit on a duplicated workload")
+    if row["bucket_misses"]:
+        problems.append(f"{row['bucket_misses']} bucket misses — a serve "
+                        "step compiled a shape warm() did not cover")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--arrival-rate", type=float, default=200.0,
+                    help="fixed request arrival rate, req/s")
+    ap.add_argument("--speculate", type=int, default=2, metavar="GAMMA")
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the run is token-exact, "
+                         "fully finished, accepting drafts, and bucket-"
+                         "miss-free")
+    args = ap.parse_args(argv)
+    [row] = run(requests=args.requests, arrival_rate=args.arrival_rate,
+                speculate=args.speculate, max_slots=args.max_slots,
+                max_new_tokens=args.gen, seed=args.seed)
+    if args.check:
+        problems = check(row)
+        if problems:
+            print("serve_latency CHECK FAILED:")
+            for p in problems:
+                print(f"  - {p}")
+            return 1
+        print("serve_latency check green: token-exact under load, "
+              f"{row['requests']} requests")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

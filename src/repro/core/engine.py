@@ -444,7 +444,8 @@ def _warm_contraction(c, cfg: FalconConfig, dtype: str,
 def warm_buckets(cfg: FalconConfig | None, arch, buckets,
                  dtype: str | None = None, train: bool = False,
                  mesh_shape: dict | None = None,
-                 kv_len: int | None = None) -> int:
+                 kv_len: int | None = None,
+                 spec_gamma: int | None = None) -> int:
     """Pre-plan the registry contraction set of ``arch`` at every bucket.
 
     The continuous-batching scheduler only ever launches bucket shapes, so
@@ -476,6 +477,14 @@ def warm_buckets(cfg: FalconConfig | None, arch, buckets,
     ``mesh_shape`` warms the PER-SHARD grouped MoE shapes a multi-device
     engine dispatches (experts over "model", tokens over "data") instead of
     the global ones no device ever runs.
+
+    ``spec_gamma`` (with ``kv_len``) additionally warms the speculative-
+    decoding contexts for every decode batch bucket ``(b, 1)`` in
+    ``buckets``: the ``(b, γ+1)`` verify forward (lm head on every row —
+    ``spec_verify`` in the workload registry) and the ``(b, 2)`` draft
+    catch-up forward, so a speculating engine's rounds are plan-cache hits
+    too. The draft model shares these keys: a layer-sliced self-draft has
+    identical per-layer contraction shapes.
     """
     cfg = _resolve(cfg)
     dtype = dtype or str(getattr(arch, "dtype", "bfloat16"))
@@ -500,6 +509,14 @@ def warm_buckets(cfg: FalconConfig | None, arch, buckets,
         contractions += workloads.resolve_contractions(
             arch, b, s, train=train, mesh_shape=mesh_shape,
             kv_len=kv_len, decode=decode)
+        if spec_gamma and decode:
+            # speculative rounds at decode batch b: the (b, γ+1) verify
+            # forward and the (b, 2) draft catch-up forward
+            contractions += workloads.resolve_contractions(
+                arch, b, spec_gamma + 1, train=train, mesh_shape=mesh_shape,
+                kv_len=kv_len, spec_verify=True)
+            contractions += workloads.resolve_contractions(
+                arch, b, 2, train=train, mesh_shape=mesh_shape, kv_len=kv_len)
 
     # static-weight contractions first, so a shape shared between a weight
     # contraction and an activation one keeps its precombined variant

@@ -325,13 +325,17 @@ def _backward_specs(s: ContractionSpec) -> list[ContractionSpec]:
 
 
 def _shape_env(cfg, batch: int, seq: int, *, kv_len=None, decode=False,
-               mesh_shape=None) -> dict:
+               mesh_shape=None, spec_verify=False) -> dict:
     """Symbol values for one (batch, seq) call context.
 
     ``kv_len`` set => serving against a KV/state cache of that length
     (attention keys span the cache, lm head sees one row per sequence);
     ``decode=True`` => single-token step (seq is the number of new tokens,
-    normally 1).
+    normally 1). ``spec_verify=True`` => a speculative verify step: seq is
+    γ+1 draft-scoring rows and the lm head runs on every one of them
+    (``logit_tokens = batch * seq`` instead of ``batch``) — the only symbol
+    speculation changes, since draft/verify projections otherwise share the
+    multi-token continuation shapes.
     """
     patches = (cfg.num_patches
                if getattr(cfg, "frontend", "") == "vision_patches" else 0)
@@ -355,7 +359,7 @@ def _shape_env(cfg, batch: int, seq: int, *, kv_len=None, decode=False,
                        getattr(cfg, "head_dim", 0))
 
     if kv_len is not None or decode:
-        env["logit_tokens"] = batch
+        env["logit_tokens"] = batch * S if spec_verify else batch
     else:
         cx = min(_XENT_CHUNK, seq)
         while cx > 1 and seq % cx:
@@ -382,8 +386,8 @@ def _shape_env(cfg, batch: int, seq: int, *, kv_len=None, decode=False,
 
 
 def resolve_contractions(arch, batch: int, seq: int, *, train: bool = False,
-                         mesh_shape=None, kv_len=None,
-                         decode: bool = False) -> list[Contraction]:
+                         mesh_shape=None, kv_len=None, decode: bool = False,
+                         spec_verify: bool = False) -> list[Contraction]:
     """Concrete contraction inventory for one (batch, seq) call context.
 
     Returns deduplicated :class:`Contraction` entries whose ``key_shape()``
@@ -392,12 +396,15 @@ def resolve_contractions(arch, batch: int, seq: int, *, train: bool = False,
     dB resolves to its dense ``(K, G*M, N)`` form). ``decode=True`` keeps
     only the single-token inventory (SSD recurrence instead of the scan);
     prefill/train keeps the scan and drops the decode recurrence.
+    ``spec_verify=True`` resolves a speculative verify context (seq = γ+1,
+    lm head on every row — see :func:`_shape_env`).
     """
     cfg = _resolve_arch(arch) if not (
         isinstance(arch, str) and arch in _PAPER_PROJECTIONS) else arch
     specs = contraction_set(arch, mesh_shape=mesh_shape)
     env = _shape_env(cfg, batch, seq, kv_len=kv_len, decode=decode,
-                     mesh_shape=mesh_shape) if not isinstance(cfg, str) else {
+                     mesh_shape=mesh_shape, spec_verify=spec_verify
+                     ) if not isinstance(cfg, str) else {
         "tokens": batch * seq}
 
     def val(x):

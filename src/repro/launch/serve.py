@@ -77,6 +77,25 @@ def main() -> None:
                          "e.g. --mesh 1,8 for 8-way tensor parallelism "
                          "(--continuous); simulate devices on one host with "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--speculate", type=int, default=0, metavar="GAMMA",
+                    help="speculative decoding: a self-draft proposes GAMMA "
+                         "tokens per round, one (batch, GAMMA+1) verify "
+                         "forward accepts greedily — token-exact, attention "
+                         "families only (--continuous)")
+    ap.add_argument("--draft-layers", type=int, default=None, metavar="N",
+                    help="slice the draft to the target's first N layers "
+                         "(default: all layers = identity draft)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix-KV cache: repeated or extended "
+                         "prompts skip prefilling the shared prefix "
+                         "(--continuous)")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="S",
+                    help="split long prompts into S-token prefill chunks "
+                         "(S must be a prefill bucket) interleaved with "
+                         "decode (--continuous)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print the first request's tokens as they are "
+                         "emitted (--continuous)")
     args = ap.parse_args()
     args.mesh_shape = _parse_mesh(args.mesh)
 
@@ -107,7 +126,9 @@ def _run_continuous(cfg, args) -> None:
     engine = ServeEngine(
         cfg, max_slots=args.max_slots, max_prompt_len=args.prompt_len,
         max_new_tokens=args.gen, precombine=args.precombine, seed=args.seed,
-        mesh_shape=args.mesh_shape, quantize=args.quant)
+        mesh_shape=args.mesh_shape, quantize=args.quant,
+        speculate=args.speculate, draft_keep_layers=args.draft_layers,
+        prefix_cache=args.prefix_cache, prefill_chunk=args.prefill_chunk)
     if engine.mesh is not None:
         print(f"mesh: {dict(engine.mesh.shape)} over "
               f"{len(jax.devices())} visible device(s)")
@@ -123,10 +144,15 @@ def _run_continuous(cfg, args) -> None:
               f"shapes compiled in {w['seconds']:.1f}s")
     rng = np.random.default_rng(args.seed)
     lo = min(args.min_prompt_len, args.prompt_len)
-    for _ in range(args.requests):
+    first = None
+    for i in range(args.requests):
         plen = int(rng.integers(lo, args.prompt_len + 1))
-        engine.submit(rng.integers(0, cfg.vocab_size, plen),
-                      max_new_tokens=int(rng.integers(1, args.gen + 1)))
+        req = engine.submit(
+            rng.integers(0, cfg.vocab_size, plen),
+            max_new_tokens=int(rng.integers(1, args.gen + 1)),
+            on_token=((lambda r, t: print(f"  rid={r.rid} token {t}"))
+                      if args.stream and i == 0 else None))
+        first = first or req
     t0 = time.perf_counter()
     done = StepLoop(engine).run_until_idle()
     wall = time.perf_counter() - t0
@@ -135,9 +161,19 @@ def _run_continuous(cfg, args) -> None:
           f"{s['prompt_tokens']} prompt + {s['generated_tokens']} generated "
           f"tokens ({s['tokens_per_s']:.1f} tok/s real, "
           f"{s['decode_tokens_per_s']:.1f} decode tok/s)")
-    print(f"steps: {s['prefill_steps']} prefill + {s['decode_steps']} decode | "
+    print(f"steps: {s['prefill_steps']} prefill + {s['decode_steps']} decode "
+          f"+ {s['verify_steps']} verify | "
           f"bucket hit rate {s['bucket_hit_rate']:.1%} | "
           f"padding waste {s['padding_waste']:.1%}")
+    if args.speculate:
+        print(f"speculation: gamma={args.speculate}, acceptance rate "
+              f"{s['acceptance_rate']:.1%} "
+              f"({s['accepted_tokens']}/{s['drafted_tokens']} drafts kept)")
+    if args.prefix_cache and s.get("prefix_cache"):
+        p = s["prefix_cache"]
+        print(f"prefix cache: {p['hits']} hits / {p['misses']} misses, "
+              f"{s['prefix_tokens_reused']} prompt tokens reused, "
+              f"{p['entries']} entries ({p['evictions']} evicted)")
     pc = s["plan_cache"]
     print(f"plan cache: {pc['hits']} hits / {pc['misses']} misses "
           f"({pc['hit_rate']:.0%} hit rate, {pc['entries']} plans)")

@@ -6,10 +6,13 @@ shape; see ``docs/serving.md``.
 """
 from .buckets import BucketPolicy, next_pow2
 from .engine import ServeEngine, StepLoop
+from .prefix_cache import PrefixEntry, RadixPrefixCache
 from .request import Request, RequestQueue
 from .scheduler import DecodeWork, PrefillWork, Scheduler
+from .speculative import DraftModel, SelfDraft
 from .stats import ServeStats
 
 __all__ = ["BucketPolicy", "next_pow2", "ServeEngine", "StepLoop", "Request",
            "RequestQueue", "DecodeWork", "PrefillWork", "Scheduler",
-           "ServeStats"]
+           "ServeStats", "DraftModel", "SelfDraft", "RadixPrefixCache",
+           "PrefixEntry"]

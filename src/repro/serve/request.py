@@ -9,10 +9,11 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import queue as _queue
 import threading
 import time
 from collections import deque
-from typing import Sequence
+from typing import Any, Callable, Iterator, Sequence
 
 __all__ = ["Request", "RequestQueue"]
 
@@ -35,6 +36,13 @@ class Request:
     first_token_t: float | None = None  # time-to-first-token source
     finish_t: float | None = None
     logits: list = dataclasses.field(default_factory=list)  # engine record mode
+    # chunked prefill / prefix reuse progress
+    prefilled: int = 0                  # prompt tokens already in slot KV
+    prefix_len: int = 0                 # of which: reused from the prefix cache
+    prefix_entry: Any = None            # pinned PrefixEntry until loaded
+    # streaming: per-token callback and/or a consumer-side iterator queue
+    on_token: Callable[["Request", int], None] | None = None
+    stream_q: _queue.Queue | None = None
 
     def __post_init__(self):
         self.prompt = [int(t) for t in self.prompt]
@@ -55,6 +63,23 @@ class Request:
     def tokens(self) -> list[int]:
         """Prompt + generation, the full sequence so far."""
         return list(self.prompt) + self.generated
+
+    def token_stream(self, timeout: float | None = None) -> Iterator[int]:
+        """Yield generated tokens as the engine emits them.
+
+        Only for requests submitted with ``stream=True``; the engine pushes
+        each token into ``stream_q`` from ``_emit`` and a ``None`` sentinel
+        on completion. Safe to consume from any thread while the engine's
+        step loop runs elsewhere.
+        """
+        if self.stream_q is None:
+            raise ValueError(
+                f"request {self.rid} was not submitted with stream=True")
+        while True:
+            tok = self.stream_q.get(timeout=timeout)
+            if tok is None:
+                return
+            yield tok
 
 
 class RequestQueue:

@@ -2,13 +2,22 @@
 
 The scheduler owns slot accounting and decides what the next step runs:
 
-* **prefill-priority** — whenever waiting requests and free slots exist, the
-  next step is a prefill micro-batch (keeps slots full, which is what decode
-  throughput amortizes over). Requests are taken FIFO from the queue head and
-  grouped while they share the head request's sequence bucket, capped by free
-  slots and the largest prefill batch bucket.
-* otherwise, a decode micro-batch over every active slot, padded up to the
-  decode batch bucket.
+* **prefill-leaning, decode-fair** — whenever waiting requests (or unfinished
+  prefill chunks) and capacity exist, the next step is a prefill micro-batch:
+  keeping slots full is what decode throughput amortizes over. But prefill no
+  longer starves decode: after ``max_consecutive_prefills`` prefill batches in
+  a row, one decode batch runs if any slot is decode-ready — under a sustained
+  arrival stream every in-flight request's inter-token gap is bounded by the
+  cap instead of the queue depth (regression-tested in
+  ``tests/test_serve_spec.py``).
+* **chunked prefill** — with ``prefill_chunk`` set, prompts longer than one
+  bucket prefill in fixed full-bucket chunks across multiple micro-batches,
+  each interleaved with decode work by the same fairness cap, so one long
+  prompt stops inflating decode p99. Intermediate chunks are exactly the
+  chunk bucket (no internal padding — the cache-validity exactness argument
+  needs contiguously written positions); only the final chunk right-pads.
+* otherwise, a decode micro-batch over every decode-ready slot, padded up to
+  the decode batch bucket.
 
 The scheduler never launches an off-grid shape: both work items carry their
 padded (bucket) dimensions, so the engine's jit cache and the plan cache key
@@ -28,13 +37,27 @@ __all__ = ["PrefillWork", "DecodeWork", "Scheduler"]
 @dataclasses.dataclass(frozen=True)
 class PrefillWork:
     requests: tuple[Request, ...]
-    slots: tuple[int, ...]          # one free slot per request, pre-assigned
+    slots: tuple[int, ...]          # one slot per request
     batch_pad: int                  # bucketed batch (>= len(requests))
-    seq_pad: int                    # bucketed prompt length
+    seq_pad: int                    # bucketed chunk length
+    # per-row chunk geometry; defaults (derived in __post_init__) describe a
+    # whole-prompt single-chunk prefill, the pre-chunking behavior
+    starts: tuple[int, ...] = ()    # cache offset this chunk resumes at
+    lengths: tuple[int, ...] = ()   # real tokens this chunk
+    final: tuple[bool, ...] = ()    # does this chunk finish the prompt?
+
+    def __post_init__(self):
+        if not self.starts:
+            object.__setattr__(self, "starts", (0,) * len(self.requests))
+        if not self.lengths:
+            object.__setattr__(
+                self, "lengths", tuple(r.prompt_len for r in self.requests))
+        if not self.final:
+            object.__setattr__(self, "final", (True,) * len(self.requests))
 
     @property
     def real_tokens(self) -> int:
-        return sum(r.prompt_len for r in self.requests)
+        return sum(self.lengths)
 
     @property
     def padded_tokens(self) -> int:
@@ -60,14 +83,23 @@ class Scheduler:
     """Admits requests into a fixed slot set and forms bucketed micro-batches."""
 
     def __init__(self, queue: RequestQueue, policy: BucketPolicy,
-                 max_slots: int):
+                 max_slots: int, *, max_consecutive_prefills: int = 2,
+                 prefill_chunk: int | None = None):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
+        if prefill_chunk is not None and prefill_chunk not in policy.prefill_seq:
+            raise ValueError(
+                f"prefill_chunk={prefill_chunk} must be a prefill bucket "
+                f"from {policy.prefill_seq} (intermediate chunks must be "
+                "exactly full buckets)")
         self.queue = queue
         self.policy = policy
         self.max_slots = max_slots
+        self.max_consecutive_prefills = max_consecutive_prefills
+        self.prefill_chunk = prefill_chunk
         self._free = list(range(max_slots))[::-1]   # pop() -> lowest slot
         self._active: dict[int, Request] = {}
+        self._prefill_run = 0                       # consecutive prefill batches
         self._lock = threading.Lock()
 
     # -- state -------------------------------------------------------------
@@ -93,13 +125,50 @@ class Scheduler:
     # -- step selection ----------------------------------------------------
 
     def next_work(self) -> PrefillWork | DecodeWork | None:
-        """The next micro-batch to run, or None when idle."""
+        """The next micro-batch to run, or None when idle.
+
+        Decode-fairness cap: prefill still leads (slots should fill fast),
+        but after ``max_consecutive_prefills`` prefill batches in a row a
+        pending decode batch runs first — a continuous arrival stream can no
+        longer starve in-flight decodes indefinitely.
+        """
+        decode = self._form_decode()
+        if (decode is not None and self.max_consecutive_prefills
+                and self._prefill_run >= self.max_consecutive_prefills):
+            self._prefill_run = 0
+            return decode
         work = self._form_prefill()
         if work is not None:
+            self._prefill_run += 1
             return work
-        return self._form_decode()
+        self._prefill_run = 0
+        return decode
+
+    def _chunk_plan(self, r: Request) -> tuple[int, int, int, bool]:
+        """(start, length, seq_pad, final) of ``r``'s next prefill chunk.
+
+        A waiting request starts at its prefix-cache hit length; a running
+        one resumes where the last chunk stopped. Chunks longer than the cap
+        are cut to exactly the cap bucket (full, no pad); the final chunk
+        pads to its own sequence bucket.
+        """
+        start = r.prefilled if r.state == "running" else r.prefix_len
+        rem = r.prompt_len - start
+        cap = self.prefill_chunk or self.policy.prefill_seq[-1]
+        if rem > cap:
+            return start, cap, cap, False
+        return start, rem, self.policy.seq_bucket(rem), True
 
     def _form_prefill(self) -> PrefillWork | None:
+        # 1) continuation chunks: partially-prefilled slots come first (they
+        #    already hold a slot; finishing them is what unblocks decode)
+        with self._lock:
+            conts = [(s, r) for s, r in sorted(self._active.items())
+                     if r.prefilled < r.prompt_len]
+        if conts:
+            return self._pack_chunks([r for _, r in conts],
+                                     [s for s, _ in conts])
+        # 2) fresh admissions from the queue head into free slots
         with self._lock:
             n_free = len(self._free)
         if n_free == 0:
@@ -108,29 +177,55 @@ class Scheduler:
         head = self.queue.peek(limit)
         if not head:
             return None
-        # group the FIFO head while requests share its sequence bucket; a
+        # group the FIFO head while requests share the head's chunk bucket; a
         # longer prompt behind a short head waits for the next micro-batch
         # rather than inflating this one's bucket for everyone
-        seq_pad = self.policy.seq_bucket(head[0].prompt_len)
+        seq_pad = self._chunk_plan(head[0])[2]
         picked: list[Request] = []
         for r in head:
-            if self.policy.seq_bucket(r.prompt_len) != seq_pad:
+            if self._chunk_plan(r)[2] != seq_pad:
                 break
             picked.append(r)
         self.queue.pop(picked)
         with self._lock:
-            slots = tuple(self._free.pop() for _ in picked)
+            slots = [self._free.pop() for _ in picked]
             for s, r in zip(slots, picked):
                 r.state, r.slot = "running", s
+                r.prefilled = r.prefix_len
                 self._active[s] = r
+        return self._pack_chunks(picked, slots)
+
+    def _pack_chunks(self, reqs: list[Request],
+                     slots: list[int]) -> PrefillWork:
+        """One PrefillWork from rows that share the first row's chunk bucket."""
+        seq_pad = self._chunk_plan(reqs[0])[2]
+        limit = self.policy.prefill_batch[-1]
+        rows = []
+        for r, s in zip(reqs, slots):
+            plan = self._chunk_plan(r)
+            if plan[2] != seq_pad:
+                continue            # different bucket: next micro-batch's turn
+            rows.append((r, s, plan))
+            # advance at formation time: the engine runs this work before the
+            # next next_work() call, and decode-readiness / the next chunk's
+            # start are scheduler state, not engine state
+            r.prefilled = plan[0] + plan[1]
+            if len(rows) == limit:
+                break
+        reqs_t = tuple(r for r, _, _ in rows)
         return PrefillWork(
-            requests=tuple(picked), slots=slots,
-            batch_pad=self.policy.prefill_batch_bucket(len(picked)),
-            seq_pad=seq_pad)
+            requests=reqs_t,
+            slots=tuple(s for _, s, _ in rows),
+            batch_pad=self.policy.prefill_batch_bucket(len(rows)),
+            seq_pad=seq_pad,
+            starts=tuple(p[0] for _, _, p in rows),
+            lengths=tuple(p[1] for _, _, p in rows),
+            final=tuple(p[3] for _, _, p in rows))
 
     def _form_decode(self) -> DecodeWork | None:
         with self._lock:
-            items = sorted(self._active.items())
+            items = [(s, r) for s, r in sorted(self._active.items())
+                     if r.prefilled >= r.prompt_len]
         if not items:
             return None
         slots = tuple(s for s, _ in items)

@@ -23,7 +23,8 @@ from repro.optim import AdamWConfig, adamw_update, cosine_schedule
 from repro.parallel.compression import compressed_psum_mean
 
 __all__ = ["make_train_step", "make_eval_step", "make_prefill_step",
-           "make_serve_prefill_step", "make_decode_step",
+           "make_serve_prefill_step", "make_chunk_prefill_step",
+           "make_decode_step", "make_verify_step",
            "make_compressed_dp_train_step", "warm_train"]
 
 
@@ -158,6 +159,49 @@ def make_serve_prefill_step(cfg: ModelConfig, max_len: int, fcfg=None):
     return prefill_step
 
 
+def make_chunk_prefill_step(cfg: ModelConfig, fcfg=None):
+    """One prefill *chunk* against existing slot-cache rows.
+
+    Chunked prefill splits a long prompt into bucket-sized pieces the
+    scheduler interleaves with decode work. Unlike ``make_serve_prefill_step``
+    (which creates a fresh cache), a chunk resumes at per-row offset
+    ``start`` (B,) into ``cache`` rows gathered from the engine's slot cache:
+    positions ``[start, start+S)`` are written this chunk, attention validity
+    admits exactly ``kpos < start + S`` (earlier chunks plus this one — any
+    stale K/V from a slot's previous occupant above that is masked until
+    overwritten), and SSM/hybrid recurrent state carries chunk-to-chunk
+    through the cache (zeroed here for first-chunk rows, since a reused slot
+    may still hold the previous occupant's state). ``start > 0`` with a
+    fresh request also covers prefix-cache reuse: the reused snapshot is
+    copied into the slot first and only the suffix runs. Intermediate chunks
+    are full buckets (``last_index = S-1``); the final chunk is right-padded
+    and ``last_index`` picks each row's true last position for the LM head.
+    Returns (logits (B, 1, V), cache rows).
+    """
+    if fcfg is not None:
+        engine.warn_deprecated_fcfg("make_chunk_prefill_step")
+
+    def chunk_step(params, cache, tokens, start, last_index):
+        with engine.maybe_use(fcfg):
+            B, S = tokens.shape[0], tokens.shape[1]
+            if "state" in cache:
+                st = cache["state"]
+                fresh = (start > 0).astype(st.dtype)
+                cache = {**cache,
+                         "state": st * fresh.reshape((1, B) + (1,) * (st.ndim - 2))}
+            mask = (jnp.arange(S)[None, :]
+                    <= last_index[:, None]).astype(jnp.float32)
+            hidden, cache, _ = M.forward(params, cfg, tokens, cache=cache,
+                                         cache_index=start, logits_mode="none",
+                                         length_mask=mask)
+            h_last = jnp.take_along_axis(
+                hidden, last_index[:, None, None].astype(jnp.int32), axis=1)
+            logits = M.compute_logits(params, cfg, h_last)
+            return logits, cache
+
+    return chunk_step
+
+
 def make_decode_step(cfg: ModelConfig, fcfg=None):
     """One-token decode against a KV cache at position ``index``.
 
@@ -176,6 +220,33 @@ def make_decode_step(cfg: ModelConfig, fcfg=None):
             return logits, new_cache
 
     return decode_step
+
+
+def make_verify_step(cfg: ModelConfig, fcfg=None):
+    """Speculative verify: score γ+1 tokens in one forward, logits per row.
+
+    ``tokens`` (B, γ+1) is ``[t_last, d_1 .. d_γ]`` per row — the pending
+    committed token followed by the draft proposals — decoded against the KV
+    cache at per-row ``index``. Causal masking makes row j's logits exactly
+    the sequential next-token distribution after ``t_last, d_1..d_j``, so
+    the greedy accept rule (accept ``d_j`` while it equals ``argmax`` of row
+    ``j-1``; always emit one bonus token from the first non-matching row)
+    reproduces non-speculative greedy decoding token-for-token regardless of
+    draft quality. Returns (logits (B, γ+1, V), cache rows); rejected draft
+    positions stay in the cache but are overwritten before attention
+    validity ever admits them (same argument as right-pad prefill).
+    """
+    if fcfg is not None:
+        engine.warn_deprecated_fcfg("make_verify_step")
+
+    def verify_step(params, cache, tokens, index):
+        with engine.maybe_use(fcfg):
+            logits, new_cache, _ = M.forward(params, cfg, tokens, cache=cache,
+                                             cache_index=index,
+                                             logits_mode="all")
+            return logits, new_cache
+
+    return verify_step
 
 
 def make_compressed_dp_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh,

@@ -87,7 +87,10 @@ def test_request_validation():
 def _sched(max_slots=4):
     q = RequestQueue()
     policy = BucketPolicy.build(max_prompt_len=16, max_slots=max_slots, min_seq=8)
-    return q, Scheduler(q, policy, max_slots=max_slots)
+    # cap disabled: these tests pin down bucket grouping / slot accounting;
+    # the decode-fairness cap has its own coverage in test_serve_spec.py
+    return q, Scheduler(q, policy, max_slots=max_slots,
+                        max_consecutive_prefills=0)
 
 
 def test_scheduler_prefill_groups_by_seq_bucket():
